@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON reports."""
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    return f"{b/1e6:.1f}MB"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(d):
+    cells = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def render(directory="experiments/dryrun/pod"):
+    cells = load(directory)
+    archs = sorted({a for a, _ in cells})
+    lines = ["| arch | shape | kind | peak/dev | compute | memory | collective"
+             " | dominant | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in archs:
+        for sh in ORDER:
+            r = cells.get((a, sh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {a} | {sh} | — | — | — | — | — | SKIP"
+                             f" (full-attention @500k) | — | — |")
+                continue
+            t = r.get("roofline", {})
+            full = r.get("full", {})
+            lines.append(
+                f"| {a} | {sh} | {r['kind']} "
+                f"| {fmt_bytes(full.get('peak_bytes_per_device', 0))} "
+                f"| {fmt_s(t.get('compute_s', 0))} "
+                f"| {fmt_s(t.get('memory_s', 0))} "
+                f"| {fmt_s(t.get('collective_s', 0))} "
+                f"| {t.get('dominant', '?')} "
+                f"| {r.get('useful_flops_ratio', 0):.2f} "
+                f"| {r.get('roofline_fraction', 0)*100:.2f}% |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "experiments/dryrun/pod"))

@@ -1,0 +1,223 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig1_memory_<opt>        second-moment bytes for a BERT-large-ish layer set
+  tbl3_convex_<dataset>    average cumulative online loss per learner
+  fig3_spectral_decay      intrinsic dim + top-256 mass of EMA Kron factors
+  lem1_fd_error            FD op-norm error vs the Lemma-1 bound
+  fig2_lm_quality          small-LM loss after N steps per optimizer
+  opt_step_time            wall-time per optimizer step (CPU, small shapes)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_fig1_memory() -> None:
+    """Paper Fig. 1: asymptotic optimizer memory, measured exactly on a
+    BERT-large-like parameter set (4096x1024 FFN + 1024x1024 attn)."""
+    from repro.core.adam import AdamConfig, adam, second_moment_bytes as ab
+    from repro.core.shampoo import (ShampooConfig, shampoo,
+                                    second_moment_bytes as sb)
+    from repro.core.sketchy import (SketchyConfig, sketchy,
+                                    second_moment_bytes as kb)
+
+    params = {
+        "ffn_in": jnp.zeros((1024, 4096), jnp.float32),
+        "ffn_out": jnp.zeros((4096, 1024), jnp.float32),
+        "attn_qkv": jnp.zeros((1024, 3072), jnp.float32),
+        "attn_o": jnp.zeros((1024, 1024), jnp.float32),
+    }
+    t0 = time.perf_counter()
+    rows = [
+        ("adam", ab(adam(AdamConfig()).init(params))),
+        ("shampoo", sb(shampoo(ShampooConfig(block_size=1024)).init(params))),
+        ("sketchy_l256", kb(sketchy(SketchyConfig(rank=256,
+                                                  block_size=1024)).init(params))),
+        ("sketchy_l64", kb(sketchy(SketchyConfig(rank=64,
+                                                 block_size=1024)).init(params))),
+    ]
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    base = dict(rows)["shampoo"]
+    for name, b in rows:
+        _row(f"fig1_memory_{name}", us, f"{b}B ({base / b:.1f}x vs shampoo)")
+
+
+def bench_tbl3_convex(T: int = 400) -> None:
+    """Paper Tbl. 3 on synthetic logistic streams (LIBSVM offline-N/A)."""
+    from repro.core import sadagrad as oco
+
+    def stream(seed, d, T, kind):
+        rng = np.random.default_rng(seed)
+        if kind == "lowrank":
+            W = np.linalg.qr(rng.normal(size=(d, d // 2)))[0]
+            feats = rng.normal(size=(T, d // 2)) @ W.T
+        else:
+            feats = rng.normal(size=(T, d)) * np.exp(-np.arange(d) / 8.0)
+        w = rng.normal(size=d)
+        y = np.sign(feats @ w + 0.1 * rng.normal(size=T))
+        return feats * y[:, None]
+
+    for kind in ("decay", "lowrank"):
+        A = stream(0, 32, T, kind)
+        results = {}
+        t0 = time.perf_counter()
+        for name in ("s-adagrad", "adagrad", "ogd", "ada-fd", "fd-son",
+                     "rfd-son"):
+            init, step, needs = oco.LEARNERS[name]
+            best = np.inf
+            for lr in (0.05, 0.2, 0.5):
+                for delta in ((1e-4, 1e-2) if needs["delta"] else (None,)):
+                    st = init(32, 10) if needs["ell"] else init(32)  # paper: l=10
+                    x = jnp.zeros((32,))
+                    tot = 0.0
+                    for a in A:
+                        aj = jnp.asarray(a, jnp.float32)
+                        tot += float(jnp.log1p(jnp.exp(-aj @ x)))
+                        g = jax.grad(lambda x: jnp.log1p(jnp.exp(-aj @ x)))(x)
+                        args = (st, x, g, lr) + ((delta,) if delta is not None
+                                                 else ())
+                        x, st = step(*args)
+                    best = min(best, tot / T)
+            results[name] = best
+        us = (time.perf_counter() - t0) * 1e6 / 6
+        order = sorted(results, key=results.get)
+        for name, v in results.items():
+            _row(f"tbl3_convex_{kind}_{name}", us,
+                 f"avg_loss={v:.4f} rank={order.index(name) + 1}")
+
+
+def bench_fig3_spectral_decay(steps: int = 30) -> None:
+    """Paper Fig. 3: EMA Kronecker-factor spectra during a small LM train."""
+    from repro.configs.registry import get_reduced
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import model as model_lib
+    from repro.train.trainer import make_train_step
+
+    cfg = get_reduced("paper_lm_100m")
+    tx = make_optimizer(OptimizerConfig(name="adam", learning_rate=5e-3,
+                                        schedule="constant"))
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    state = tx.init(params)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=8))
+    step = jax.jit(make_train_step(cfg, tx))
+    beta2 = 0.999
+    L = None
+    t0 = time.perf_counter()
+    grad_fn = jax.jit(jax.grad(
+        lambda p, b: model_lib.loss_fn(cfg, p, b)))
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+        g = grad_fn(params, batch)["layers"]["mlp"]["w_gate"][0]
+        GG = np.asarray(g, np.float64) @ np.asarray(g, np.float64).T
+        L = GG if L is None else beta2 * L + GG
+        params, state, _ = step(params, state, batch)
+    us = (time.perf_counter() - t0) * 1e6 / steps
+    lam = np.maximum(np.linalg.eigvalsh(L)[::-1], 0)
+    d = len(lam)
+    intrinsic = lam.sum() / max(lam[0], 1e-12)
+    k = max(d // 4, 1)
+    topk = lam[:k].sum() / max(lam.sum(), 1e-12)
+    _row("fig3_spectral_decay", us,
+         f"dim={d} intrinsic_dim={intrinsic:.1f} top{k}_mass={topk:.3f}")
+
+
+def bench_lem1_fd_error(T: int = 200) -> None:
+    from repro.core.fd import fd_covariance, fd_init, fd_update
+
+    rng = np.random.default_rng(0)
+    d, ell = 64, 16
+    basis = np.linalg.qr(rng.normal(size=(d, d)))[0]
+    scales = np.exp(-np.arange(d) / 4.0)
+    st = fd_init(d, ell)
+    G = np.zeros((d, d))
+    t0 = time.perf_counter()
+    for _ in range(T):
+        g = basis @ (scales * rng.normal(size=d))
+        G += np.outer(g, g)
+        st = fd_update(st, jnp.asarray(g, jnp.float32))
+    us = (time.perf_counter() - t0) * 1e6 / T
+    lam = np.maximum(np.linalg.eigvalsh(G)[::-1], 0)
+    bound = min(lam[k:].sum() / (ell - k) for k in range(ell))
+    err = np.linalg.norm(G - np.asarray(fd_covariance(st)), 2)
+    _row("lem1_fd_error", us,
+         f"op_err={err:.3f} rho={float(st.rho):.3f} lemma1_bound={bound:.3f}")
+
+
+def bench_fig2_lm_quality(steps: int = 60) -> None:
+    """Paper Fig. 2 analogue: small-LM quality per optimizer, same budget."""
+    from repro.configs.registry import get_reduced
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import model as model_lib
+    from repro.train.trainer import make_train_step
+
+    cfg = get_reduced("paper_lm_100m")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=8))
+    for name, lr in (("sketchy", 5e-3), ("shampoo", 5e-3), ("adam", 5e-3)):
+        tx = make_optimizer(OptimizerConfig(
+            name=name, learning_rate=lr, rank=8, block_size=32,
+            update_every=2, total_steps=steps, schedule="constant"))
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        state = tx.init(params)
+        step = jax.jit(make_train_step(cfg, tx))
+        t0 = time.perf_counter()
+        losses = []
+        for t in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        us = (time.perf_counter() - t0) * 1e6 / steps
+        _row(f"fig2_lm_quality_{name}", us,
+             f"loss_first5={np.mean(losses[:5]):.3f} "
+             f"loss_last5={np.mean(losses[-5:]):.3f}")
+
+
+def bench_opt_step_time(iters: int = 20) -> None:
+    from repro.core.factory import OptimizerConfig, make_optimizer
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)}
+    for name in ("sketchy", "shampoo", "adam"):
+        tx = make_optimizer(OptimizerConfig(name=name, rank=256,
+                                            block_size=1024, update_every=10,
+                                            schedule="constant"))
+        state = tx.init(params)
+        upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
+        u, state = upd(g, state, params)  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            u, state = upd(g, state, params)
+        jax.block_until_ready(u)
+        us = (time.perf_counter() - t0) * 1e6 / iters
+        _row(f"opt_step_time_{name}", us, "1024x1024 block, update_every=10")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fig1_memory()
+    bench_lem1_fd_error()
+    bench_tbl3_convex()
+    bench_fig3_spectral_decay()
+    bench_fig2_lm_quality()
+    bench_opt_step_time()
+
+
+if __name__ == "__main__":
+    main()

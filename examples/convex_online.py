@@ -1,0 +1,45 @@
+"""Paper Appendix A: S-AdaGrad vs FD baselines on online logistic regression
+(synthetic streams; see DESIGN.md §6 for the LIBSVM note).
+
+    PYTHONPATH=src python examples/convex_online.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sadagrad as oco
+
+
+def make_stream(seed=0, d=32, T=500):
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(T, d)) * np.exp(-np.arange(d) / 8.0)
+    w = rng.normal(size=d)
+    y = np.sign(feats @ w + 0.1 * rng.normal(size=T))
+    return feats * y[:, None]
+
+
+def main():
+    d, T, ell = 32, 500, 6
+    A = make_stream(d=d, T=T)
+    print(f"online logistic regression: d={d} T={T} sketch ell={ell}")
+    for name in ("s-adagrad", "adagrad", "ogd", "ada-fd", "fd-son", "rfd-son"):
+        init, step, needs = oco.LEARNERS[name]
+        best, best_lr = np.inf, None
+        for lr in (0.05, 0.2, 0.5):
+            for delta in ((1e-4, 1e-2) if needs["delta"] else (None,)):
+                st = init(d, ell) if needs["ell"] else init(d)
+                x = jnp.zeros((d,))
+                tot = 0.0
+                for a in A:
+                    aj = jnp.asarray(a, jnp.float32)
+                    tot += float(jnp.log1p(jnp.exp(-aj @ x)))
+                    g = jax.grad(lambda x: jnp.log1p(jnp.exp(-aj @ x)))(x)
+                    args = (st, x, g, lr) + ((delta,) if delta is not None else ())
+                    x, st = step(*args)
+                if tot < best:
+                    best, best_lr = tot, lr
+        print(f"  {name:10s} avg cumulative loss {best / T:.4f} (lr={best_lr})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + greedy decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [sys.argv[0], "--arch", "paper-lm-100m", "--batch", "4",
+                "--max-seq", "48", "--new-tokens", "10"] + sys.argv[1:]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""End-to-end driver: train the ~100M paper LM for a few hundred steps with
+checkpoint/restart. Thin wrapper over the production launcher.
+
+Full-size (slow on CPU; the real target is TPU):
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+CPU-quick:
+    PYTHONPATH=src python examples/train_lm.py --reduced --steps 100
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:]
+    defaults = ["--arch", "paper-lm-100m", "--optimizer", "sketchy",
+                "--batch", "8", "--seq", "256", "--lr", "3e-3",
+                "--checkpoint-dir", "/tmp/repro-ckpt-train-lm", "--resume",
+                "--metrics-out", "experiments/train_lm_metrics.json"]
+    sys.argv = [sys.argv[0]] + defaults + argv
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

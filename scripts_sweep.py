@@ -1,0 +1,39 @@
+"""Dry-run sweep driver: every (arch x shape) on single-pod (+probes) and
+multi-pod (compile-proof). Resumable: skips cells with existing JSON."""
+import json, os, subprocess, sys, time
+
+ARCHS = ["gemma-2b", "phi3-mini-3.8b", "mamba2-370m", "musicgen-large",
+         "paper-lm-100m", "deepseek-moe-16b", "zamba2-7b", "qwen2.5-32b",
+         "qwen3-32b", "qwen2-vl-72b", "kimi-k2-1t-a32b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+def run(arch, shape, outdir, extra):
+    out = f"experiments/dryrun/{outdir}/{arch}-{shape}.json"
+    if os.path.exists(out):
+        print(f"SKIP (exists) {outdir} {arch} {shape}", flush=True)
+        return
+    t0 = time.time()
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out] + extra
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       env={**os.environ, "PYTHONPATH": "src"}, timeout=7200)
+    dt = time.time() - t0
+    status = "OK" if r.returncode == 0 else f"FAIL({r.returncode})"
+    print(f"{status} {outdir} {arch} {shape} {dt:.0f}s", flush=True)
+    if r.returncode != 0:
+        with open(out + ".err", "w") as f:
+            f.write(r.stdout[-4000:] + "\n" + r.stderr[-8000:])
+
+for arch in ARCHS:
+    for shape in SHAPES:
+        try:
+            run(arch, shape, "pod", [])
+        except Exception as e:
+            print("ERR", arch, shape, e, flush=True)
+for arch in ARCHS:
+    for shape in SHAPES:
+        try:
+            run(arch, shape, "multipod", ["--multi-pod", "--skip-probes"])
+        except Exception as e:
+            print("ERR", arch, shape, e, flush=True)
+print("SWEEP_DONE", flush=True)

@@ -1,0 +1,11 @@
+"""paper-lm-100m — ~100M-param dense LM for the end-to-end driver
+(the paper's own benchmarks are vision/audio/graph; DESIGN.md §6)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-lm-100m", family="dense",
+    num_layers=12, d_model=768, vocab_size=32768,
+    num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=3072, mlp_act="swiglu",
+    rope_theta=1e4,
+)

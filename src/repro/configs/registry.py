@@ -1,0 +1,127 @@
+"""Architecture registry + assigned input shapes + dry-run input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "qwen2_vl_72b", "zamba2_7b", "qwen2_5_32b", "phi3_mini_3_8b", "gemma_2b",
+    "qwen3_32b", "deepseek_moe_16b", "kimi_k2_1t_a32b", "musicgen_large",
+    "mamba2_370m", "paper_lm_100m",
+)
+
+# public ids (assignment spelling) -> module names
+ALIASES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-32b": "qwen3_32b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-370m": "mamba2_370m",
+    "paper-lm-100m": "paper_lm_100m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    """Smoke-test variant: same family/features, tiny dims."""
+    cfg = get_config(name)
+    kv = min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0
+    heads = 4 if cfg.num_heads else 0
+    if cfg.num_kv_heads == 1:
+        kv = 1
+    repl = dict(
+        num_layers=max(2, min(3, cfg.num_layers)),
+        d_model=64,
+        vocab_size=256,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        dense_ff=128 if cfg.dense_ff else 0,
+        num_experts=8 if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2),
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        ssm_chunk=16,
+        attn_every=2 if cfg.attn_every else 0,
+        capacity_factor=8.0,   # no token drops => decode == forward exactly
+        q_chunk=32,
+        remat=False,
+        dtype="float32",
+        first_dense_layers=min(cfg.first_dense_layers, 1),
+    )
+    if cfg.family == "hybrid":
+        repl["num_layers"] = 4
+    return dataclasses.replace(cfg, **repl)
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The assigned cells for this arch (long_500k only if sub-quadratic)."""
+    for name, sh in SHAPES.items():
+        if name == "long_500k" and not cfg.subquadratic:
+            continue  # documented skip: full-attention arch (DESIGN.md §5)
+        yield sh
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, *,
+                batch_override: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one step's inputs (no allocation)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.embed_inputs:
+            tok_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+            specs["tokens"] = jax.ShapeDtypeStruct(tok_shape, i32)
+        else:  # vlm stub: precomputed patch/frame embeddings
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        if shape.kind == "train":
+            lab_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+            specs["labels"] = jax.ShapeDtypeStruct(lab_shape, i32)
+        return specs
+
+    # decode: single token against a length-S cache
+    specs = {}
+    if cfg.embed_inputs:
+        tok_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1)
+        specs["token"] = jax.ShapeDtypeStruct(tok_shape, i32)
+    else:
+        specs["embed"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+    return specs

@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — FD sketching + Sketchy optimizers."""
+from repro.core.fd import FDState, fd_init, fd_update, fd_covariance, \
+    fd_apply_inverse_root, fd_inverse_root_coeffs  # noqa: F401
+from repro.core.sketchy import SketchyConfig  # noqa: F401
+from repro.core.shampoo import ShampooConfig  # noqa: F401
+from repro.core.adam import AdamConfig  # noqa: F401
+from repro.core.factory import OptimizerConfig, make_optimizer  # noqa: F401

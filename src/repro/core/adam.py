@@ -1,0 +1,53 @@
+"""Adam baseline (paper's first-order comparison) — linear-memory diag
+second moment."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transform import GradientTransformation
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    state_dtype: Any = jnp.float32
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(cfg: AdamConfig = AdamConfig()) -> GradientTransformation:
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+        return AdamState(count=jnp.zeros([], jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update_fn(updates, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g.astype(m.dtype),
+                          state.mu, updates)
+        nu = jax.tree.map(lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g.astype(v.dtype)),
+                          state.nu, updates)
+        bc1 = 1 - cfg.beta1 ** count.astype(jnp.float32)
+        bc2 = 1 - cfg.beta2 ** count.astype(jnp.float32)
+        out = jax.tree.map(
+            lambda m, v, g: ((m / bc1) * jax.lax.rsqrt(v / bc2 + cfg.eps ** 2)).astype(g.dtype),
+            mu, nu, updates)
+        return out, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def second_moment_bytes(state: AdamState) -> int:
+    return sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(state.nu))

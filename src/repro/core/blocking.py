@@ -1,0 +1,79 @@
+"""Shampoo-style parameter blocking (paper §3.4, "Blocked Shampoo").
+
+Every parameter tensor is normalized to a *stack of matrix blocks*:
+
+  - scalars / vectors        -> 'diag' (no Kronecker factors; diagonal path)
+  - (..., m, n) tensors      -> leading dims flattened into a stack dim
+                                 (scan-over-layers stacks, MoE expert dims),
+                                 last two dims tiled into blocks of at most
+                                 ``block_size`` (padded to equal tiles so the
+                                 whole thing is vmap-able).
+
+Blocking bounds the Kronecker-factor size (the paper fixes 1024) and is what
+makes the FD sketch rank ``ell`` meaningful per-block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInfo:
+    kind: str              # 'diag' | 'matrix'
+    shape: tuple           # original shape
+    stack: int = 1         # flattened leading dims
+    m: int = 0             # original matrix rows
+    n: int = 0             # original matrix cols
+    bs_m: int = 0          # block rows
+    bs_n: int = 0          # block cols
+    mb: int = 0            # number of row tiles
+    nb: int = 0            # number of col tiles
+
+    @property
+    def num_blocks(self) -> int:
+        return self.stack * self.mb * self.nb
+
+
+def _tile(dim: int, block_size: int) -> tuple[int, int]:
+    """(num_tiles, tile_size) with tile_size <= block_size; padded layout."""
+    if dim <= block_size:
+        return 1, dim
+    nt = math.ceil(dim / block_size)
+    return nt, block_size
+
+
+def analyze(shape: tuple, block_size: int = 1024) -> BlockInfo:
+    if len(shape) < 2 or min(shape[-2:]) == 1:
+        return BlockInfo(kind="diag", shape=tuple(shape))
+    *lead, m, n = shape
+    stack = int(math.prod(lead)) if lead else 1
+    mb, bs_m = _tile(m, block_size)
+    nb, bs_n = _tile(n, block_size)
+    return BlockInfo(kind="matrix", shape=tuple(shape), stack=stack,
+                     m=m, n=n, bs_m=bs_m, bs_n=bs_n, mb=mb, nb=nb)
+
+
+def to_blocks(x: jnp.ndarray, info: BlockInfo) -> jnp.ndarray:
+    """(..., m, n) -> (stack*mb*nb, bs_m, bs_n), zero-padded."""
+    assert info.kind == "matrix"
+    x = x.reshape(info.stack, info.m, info.n)
+    pm = info.mb * info.bs_m - info.m
+    pn = info.nb * info.bs_n - info.n
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
+    x = x.reshape(info.stack, info.mb, info.bs_m, info.nb, info.bs_n)
+    x = x.transpose(0, 1, 3, 2, 4)
+    return x.reshape(info.num_blocks, info.bs_m, info.bs_n)
+
+
+def from_blocks(blocks: jnp.ndarray, info: BlockInfo) -> jnp.ndarray:
+    """Inverse of to_blocks, dropping padding."""
+    assert info.kind == "matrix"
+    x = blocks.reshape(info.stack, info.mb, info.nb, info.bs_m, info.bs_n)
+    x = x.transpose(0, 1, 3, 2, 4)
+    x = x.reshape(info.stack, info.mb * info.bs_m, info.nb * info.bs_n)
+    x = x[:, :info.m, :info.n]
+    return x.reshape(info.shape)

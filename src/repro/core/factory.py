@@ -1,0 +1,88 @@
+"""Optimizer factory: name -> full training transformation chain.
+
+Chain layout (paper App. C conventions):
+  clip_by_global_norm -> direction (sketchy | shampoo | adam)
+  -> EMA momentum ("moving_average_for_momentum") -> decoupled weight decay
+  -> -lr(t) schedule
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import adam as adam_lib
+from repro.core import shampoo as shampoo_lib
+from repro.core import sketchy as sketchy_lib
+from repro.core import schedules, transform
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "sketchy"              # sketchy | shampoo | adam
+    learning_rate: float = 1e-3
+    total_steps: int = 1000
+    warmup_frac: float = 0.05
+    beta1: float = 0.9
+    beta2: float = 0.999
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    schedule: str = "warmup_cosine"    # warmup_cosine | constant
+    # sketchy/shampoo specific
+    rank: int = 256
+    block_size: int = 1024
+    update_every: int = 10
+    start_preconditioning_step: int = 0
+    use_kernels: bool = False
+
+
+def make_optimizer(cfg: OptimizerConfig) -> transform.GradientTransformation:
+    if cfg.name == "sketchy":
+        direction = sketchy_lib.sketchy(sketchy_lib.SketchyConfig(
+            rank=cfg.rank, block_size=cfg.block_size, beta2=cfg.beta2,
+            update_every=cfg.update_every,
+            start_preconditioning_step=cfg.start_preconditioning_step,
+            use_kernels=cfg.use_kernels))
+    elif cfg.name == "shampoo":
+        direction = shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
+            block_size=cfg.block_size, beta2=cfg.beta2,
+            root_every=cfg.update_every,
+            start_preconditioning_step=cfg.start_preconditioning_step))
+    elif cfg.name == "adam":
+        direction = adam_lib.adam(adam_lib.AdamConfig(
+            beta1=cfg.beta1, beta2=cfg.beta2))
+    else:
+        raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+    if cfg.schedule == "warmup_cosine":
+        sched = schedules.warmup_cosine(cfg.learning_rate, cfg.total_steps,
+                                        cfg.warmup_frac)
+    else:
+        sched = schedules.constant(cfg.learning_rate)
+    neg = lambda c: -sched(c)
+
+    parts = []
+    if cfg.grad_clip:
+        parts.append(transform.clip_by_global_norm(cfg.grad_clip))
+    parts.append(direction)
+    if cfg.name != "adam":  # adam has built-in beta1 momentum
+        parts.append(transform.momentum(cfg.beta1, ema=True))
+    if cfg.weight_decay:
+        parts.append(transform.add_decayed_weights(cfg.weight_decay))
+    parts.append(transform.scale_by_schedule(neg))
+    return transform.chain(*parts)
+
+
+def second_moment_bytes(name: str, state) -> int:
+    """Second-moment memory of the *direction* stage inside the chain."""
+    idx = 1 if len(state) >= 2 and isinstance(state[0], tuple) and not state[0] else None
+    # chain state: tuple of member states; find the direction stage by type.
+    for s in state:
+        if isinstance(s, sketchy_lib.SketchyState):
+            return sketchy_lib.second_moment_bytes(s)
+        if isinstance(s, shampoo_lib.ShampooState):
+            return shampoo_lib.second_moment_bytes(s)
+        if isinstance(s, adam_lib.AdamState):
+            return adam_lib.second_moment_bytes(s)
+    raise ValueError("no direction stage found in state")

@@ -1,0 +1,136 @@
+"""Frequent Directions sketching (paper Alg. 1 + exponentially-weighted Obs. 6).
+
+The sketch of a PSD stream ``G_t = sum_s beta2^{t-s} A_s A_s^T`` is maintained
+in *eigenpair form* ``(U, s, rho)`` with ``U: (d, ell)`` orthonormal columns,
+``s: (ell,)`` descending eigenvalues (deflation keeps ``s[-1] == 0``), and
+``rho`` the accumulated escaped mass used for the dynamic diagonal
+compensation ``rho * I`` (the paper's key construction, Alg. 2/3 line 6).
+
+TPU adaptation (DESIGN.md §3): instead of eigendecomposing the d x d matrix
+(Alg. 1 line 3) or SVD-ing the d x (ell+r) stack (paper §6), we
+eigendecompose the (ell+r) x (ell+r) Gram matrix of ``M = [sqrt(beta2)*B, A]``
+— one tall-skinny MXU matmul plus a small eigh. Identical result, never
+materializes d x d, and avoids large-matrix SVD which TPUs lack.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FDState(NamedTuple):
+    eigvecs: jnp.ndarray  # (d, ell) approximate top eigenvectors U
+    eigvals: jnp.ndarray  # (ell,) deflated eigenvalues, descending, last == 0
+    rho: jnp.ndarray      # scalar: accumulated escaped mass rho_{1:t}
+
+
+def fd_init(d: int, ell: int, dtype=jnp.float32) -> FDState:
+    ell = min(ell, d)
+    return FDState(
+        eigvecs=jnp.zeros((d, ell), dtype),
+        eigvals=jnp.zeros((ell,), dtype),
+        rho=jnp.zeros((), dtype),
+    )
+
+
+def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
+              gram_fn=None) -> FDState:
+    """One FD-update step on the PSD increment ``new_factor @ new_factor.T``.
+
+    Args:
+      state: current sketch.
+      new_factor: (d, r) factor A of the new PSD term M_t = A A^T. For
+        S-AdaGrad this is the gradient column g_t[:, None]; for S-Shampoo's
+        left factor it is the gradient matrix G_t itself (L += G G^T), and
+        G_t^T for the right factor.
+      beta2: EMA decay (1.0 recovers the unweighted paper Alg. 1).
+      gram_fn: optional C = M^T M implementation (Pallas kernel injection
+        point); defaults to jnp.
+
+    Returns:
+      Updated state; ``state.rho`` accumulates escaped mass with the same
+      beta2 decay (DESIGN.md §6 — plain sum when beta2 == 1).
+    """
+    U, s, rho = state
+    d, ell = U.shape
+    if new_factor.ndim == 1:
+        new_factor = new_factor[:, None]
+    compute_dtype = jnp.promote_types(U.dtype, jnp.float32)
+
+    # M = [sqrt(beta2) * B, A] where B = U diag(sqrt(s)).
+    B = U.astype(compute_dtype) * jnp.sqrt(beta2 * s.astype(compute_dtype))[None, :]
+    M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=1)  # (d, ell+r)
+
+    if gram_fn is None:
+        C = M.T @ M
+    else:
+        C = gram_fn(M)
+    C = 0.5 * (C + C.T)  # symmetrize for eigh stability
+
+    lam, V = jnp.linalg.eigh(C)          # ascending
+    lam = jnp.maximum(lam[::-1], 0.0)    # descending, clip tiny negatives
+    V = V[:, ::-1]
+
+    lam_top = lam[:ell]
+    # Escaped eigenvalue: lambda_ell of the un-deflated update. When the
+    # stacked matrix has rank <= ell the escaped mass is genuinely 0 (it is
+    # lam[ell-1] only after deflation below keeps the invariant s[-1] == 0).
+    rho_t = lam_top[ell - 1]
+
+    inv_sqrt = jnp.where(lam_top > 1e-30, jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
+    U_new = (M @ V[:, :ell]) * inv_sqrt[None, :]
+    s_new = lam_top - rho_t  # deflate: last entry becomes exactly 0
+
+    return FDState(
+        eigvecs=U_new.astype(U.dtype),
+        eigvals=s_new.astype(s.dtype),
+        rho=(beta2 * rho + rho_t).astype(state.rho.dtype),
+    )
+
+
+def fd_covariance(state: FDState, include_rho: bool = False) -> jnp.ndarray:
+    """Materialize the sketched covariance (testing/analysis only)."""
+    U, s, rho = state
+    cov = (U * s[None, :]) @ U.T
+    if include_rho:
+        cov = cov + rho * jnp.eye(U.shape[0], dtype=cov.dtype)
+    return cov
+
+
+def fd_inverse_root_coeffs(state: FDState, *, exponent: float, eps: float
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Coefficients for applying (U diag(s) U^T + (rho+eps) I)^{exponent}.
+
+    Returns (base, coeffs) such that
+      apply(G) = base * G + U @ diag(coeffs) @ (U^T @ G)
+    Uses the eigenpair representation: eigenvalues of the compensated
+    preconditioner are (s_i + rho + eps) on span(U) and (rho + eps) on the
+    orthogonal complement. Elementwise — no iterative root solve needed.
+    """
+    _, s, rho = state
+    damp = rho + eps
+    # Moore-Penrose semantics (Alg. 2 uses the pseudoinverse): with no
+    # diagonal mass, directions outside span(U) map to 0, not eps^exponent.
+    tol = 1e-10
+    base = jnp.where(damp > tol, jnp.power(jnp.maximum(damp, tol), exponent),
+                     0.0)
+    lam = s + damp
+    coeffs = jnp.where(lam > tol, jnp.power(jnp.maximum(lam, tol), exponent),
+                       0.0) - base
+    return base, coeffs
+
+
+def fd_apply_inverse_root(state: FDState, G: jnp.ndarray, *, exponent: float,
+                          eps: float, lowrank_fn=None) -> jnp.ndarray:
+    """Compute (sketch + (rho+eps) I)^{exponent} @ G without forming d x d.
+
+    lowrank_fn: optional fused kernel with signature (U, coeffs, base, G).
+    """
+    base, coeffs = fd_inverse_root_coeffs(state, exponent=exponent, eps=eps)
+    U = state.eigvecs
+    if lowrank_fn is not None:
+        return lowrank_fn(U, coeffs, base, G)
+    proj = U.T @ G
+    return base * G + U @ (coeffs[:, None] * proj)

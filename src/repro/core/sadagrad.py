@@ -1,0 +1,121 @@
+"""Sketchy AdaGrad (paper Alg. 2) and the Appendix-A convex competitors.
+
+These operate on a single d-dimensional decision vector in the OCO setting
+(Sec. 2) — used by the convex benchmarks that re-create paper Tbl. 3 / Obs. 2.
+All learners expose:  state = init(d);  x, state = step(state, x, g, lr).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
+
+
+class SAdaGradState(NamedTuple):
+    sketch: FDState
+
+
+def sadagrad_init(d: int, ell: int) -> SAdaGradState:
+    return SAdaGradState(sketch=fd_init(d, ell))
+
+
+def sadagrad_step(state: SAdaGradState, x, g, lr):
+    """Alg. 2: sketch, compensate with rho_{1:t} I, precondition by -1/2 root."""
+    sketch = fd_update(state.sketch, g[:, None], beta2=1.0)
+    direction = fd_apply_inverse_root(sketch, g[:, None], exponent=-0.5,
+                                      eps=0.0)[:, 0]
+    return x - lr * direction, SAdaGradState(sketch=sketch)
+
+
+class AdaFDState(NamedTuple):
+    sketch: FDState
+
+
+def adafd_init(d: int, ell: int) -> AdaFDState:
+    return AdaFDState(sketch=fd_init(d, ell))
+
+
+def adafd_step(state: AdaFDState, x, g, lr, delta: float):
+    """Ada-FD [26]: FD sketch + *fixed* diagonal delta I (no compensation).
+
+    Provably Omega(T^{3/4}) on the Obs. 2 stream — the pathology S-AdaGrad's
+    dynamic compensation fixes.
+    """
+    sketch = fd_update(state.sketch, g[:, None], beta2=1.0)
+    # fixed delta regularizer; ignore accumulated rho entirely
+    no_comp = FDState(sketch.eigvecs, sketch.eigvals,
+                      jnp.zeros_like(sketch.rho))
+    direction = fd_apply_inverse_root(no_comp, g[:, None], exponent=-0.5,
+                                      eps=delta)[:, 0]
+    return x - lr * direction, AdaFDState(sketch=sketch)
+
+
+class FDSONState(NamedTuple):
+    sketch: FDState
+
+
+def fdson_init(d: int, ell: int) -> FDSONState:
+    return FDSONState(sketch=fd_init(d, ell))
+
+
+def fdson_step(state: FDSONState, x, g, lr, delta: float):
+    """FD-SON [27]: Online-Newton-Step-style inverse (exponent -1) on the FD
+    sketch with fixed delta I."""
+    sketch = fd_update(state.sketch, g[:, None], beta2=1.0)
+    no_comp = FDState(sketch.eigvecs, sketch.eigvals, jnp.zeros_like(sketch.rho))
+    direction = fd_apply_inverse_root(no_comp, g[:, None], exponent=-1.0,
+                                      eps=delta)[:, 0]
+    return x - lr * direction, FDSONState(sketch=sketch)
+
+
+class RFDSONState(NamedTuple):
+    sketch: FDState
+
+
+def rfdson_init(d: int, ell: int) -> RFDSONState:
+    return RFDSONState(sketch=fd_init(d, ell))
+
+
+def rfdson_step(state: RFDSONState, x, g, lr):
+    """RFD-SON [43] (delta=0 "RFD_0" variant): robust FD compensates with
+    rho_{1:t}/2 in the ONS-style inverse."""
+    sketch = fd_update(state.sketch, g[:, None], beta2=1.0)
+    half = FDState(sketch.eigvecs, sketch.eigvals, sketch.rho * 0.5)
+    direction = fd_apply_inverse_root(half, g[:, None], exponent=-1.0,
+                                      eps=0.0)[:, 0]
+    return x - lr * direction, RFDSONState(sketch=sketch)
+
+
+class DiagAdaGradState(NamedTuple):
+    acc: jnp.ndarray
+
+
+def adagrad_init(d: int) -> DiagAdaGradState:
+    return DiagAdaGradState(acc=jnp.zeros((d,)))
+
+
+def adagrad_step(state: DiagAdaGradState, x, g, lr):
+    acc = state.acc + jnp.square(g)
+    return x - lr * g * jax.lax.rsqrt(acc + 1e-12), DiagAdaGradState(acc=acc)
+
+
+def ogd_init(d: int):
+    return ()
+
+
+def ogd_step(state, x, g, lr):
+    return x - lr * g, state
+
+
+LEARNERS = {
+    "s-adagrad": (sadagrad_init, sadagrad_step, {"ell": True, "delta": False}),
+    "ada-fd": (adafd_init, adafd_step, {"ell": True, "delta": True}),
+    "fd-son": (fdson_init, fdson_step, {"ell": True, "delta": True}),
+    "rfd-son": (rfdson_init, rfdson_step, {"ell": True, "delta": False}),
+    "adagrad": (adagrad_init, adagrad_step, {"ell": False, "delta": False}),
+    "ogd": (ogd_init, ogd_step, {"ell": False, "delta": False}),
+}

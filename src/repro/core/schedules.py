@@ -1,0 +1,31 @@
+"""Learning-rate schedules (paper App. C: linear warmup -> cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def sched(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return sched
+
+
+def warmup_cosine(peak: float, total_steps: int, warmup_frac: float = 0.05,
+                  end_value: float = 0.0):
+    """Linear warmup for ``warmup_frac`` of training, then cosine decay to 0.
+
+    Matches the paper's setup: warmup transition 5% of the way into training,
+    cosine quarter-period set to the number of training steps.
+    """
+    warmup_steps = max(int(total_steps * warmup_frac), 1)
+
+    def sched(count):
+        count = jnp.asarray(count, jnp.float32)
+        warm = peak * count / warmup_steps
+        decay_steps = max(total_steps - warmup_steps, 1)
+        frac = jnp.clip((count - warmup_steps) / decay_steps, 0.0, 1.0)
+        cos = end_value + (peak - end_value) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(count < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,185 @@
+"""Sketchy Shampoo (paper Alg. 3 + Obs. 6 EMA variant) as a composable
+GradientTransformation.
+
+Per matrix block (paper §3.4 blocking, default 1024):
+  every ``update_every`` steps (paper observes only every 10th gradient —
+  the "harder setting" of §6):
+      (rho_L, L-sketch) <- FD-update(beta2 * L-sketch, G G^T)
+      (rho_R, R-sketch) <- FD-update(beta2 * R-sketch, G^T G)
+  every step:
+      P = (L-sketch + (rho_L+eps) I)^{-1/4}  G  (R-sketch + (rho_R+eps) I)^{-1/4}
+computed entirely in factored (U, s, rho) form — the d x d preconditioner is
+never materialized and the second-moment state is O((m+n) * ell) per block
+instead of O(m^2 + n^2) (Shampoo) or O(mn) (Adam).
+
+Vectors/scalars take the diagonal (RMSProp) path, as Shampoo itself does.
+Grafting (paper App. C: RMSPROP_NORMALIZED) supplies the per-tensor step size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
+from repro.core.transform import GradientTransformation
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchyConfig:
+    rank: int = 256                 # ell; paper fixes 256 (untuned)
+    block_size: int = 1024          # paper App. C
+    beta2: float = 0.999            # second-moment EMA (paper §5.2)
+    update_every: int = 10          # FD observes every k-th gradient (paper §6)
+    start_preconditioning_step: int = 0   # paper App. C uses 101 at scale
+    matrix_eps: float = 1e-6
+    graft_eps: float = 1e-8
+    graft: str = "rmsprop_normalized"     # rmsprop_normalized | rmsprop | none
+    exponent: float = -0.25         # per-side inverse root (Alg. 3)
+    state_dtype: Any = jnp.float32
+    use_kernels: bool = False       # route matmuls through Pallas ops
+
+
+class MatrixLeafState(NamedTuple):
+    left: FDState     # batched over blocks: (S, bm, ell), (S, ell), (S,)
+    right: FDState
+    graft_acc: jnp.ndarray
+
+
+class DiagLeafState(NamedTuple):
+    acc: jnp.ndarray
+
+
+class SketchyState(NamedTuple):
+    count: jnp.ndarray
+    leaves: tuple
+
+
+def _graft_direction(g, acc, cfg: SketchyConfig):
+    """Returns (graft_direction, new_acc). g, acc float32."""
+    if cfg.graft == "none":
+        return g, acc
+    if cfg.graft == "rmsprop_normalized":
+        gn = g / (jnp.linalg.norm(g) + 1e-16)
+    else:
+        gn = g
+    acc = cfg.beta2 * acc + (1.0 - cfg.beta2) * jnp.square(gn)
+    return gn * jax.lax.rsqrt(acc + cfg.graft_eps), acc
+
+
+def _vmapped_fd_update(states: FDState, factors: jnp.ndarray, beta2: float,
+                       gram_fn=None) -> FDState:
+    return jax.vmap(lambda s, a: fd_update(s, a, beta2, gram_fn=gram_fn))(states, factors)
+
+
+def _precondition_blocks(left: FDState, right: FDState, gb: jnp.ndarray,
+                         cfg: SketchyConfig, lowrank_fn=None) -> jnp.ndarray:
+    """P = L^{-1/4} G R^{-1/4} per block, factored form."""
+    def one(ls, rs, G):
+        tmp = fd_apply_inverse_root(ls, G, exponent=cfg.exponent,
+                                    eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
+        tmpT = fd_apply_inverse_root(rs, tmp.T, exponent=cfg.exponent,
+                                     eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
+        return tmpT.T
+
+    return jax.vmap(one)(left, right, gb)
+
+
+def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
+    """S-Shampoo direction transform (emits a descent direction, no lr)."""
+    gram_fn = None
+    lowrank_fn = None
+    if cfg.use_kernels:
+        from repro.kernels.gram import ops as gram_ops
+        from repro.kernels.lowrank import ops as lowrank_ops
+        gram_fn = gram_ops.gram
+        lowrank_fn = lowrank_ops.lowrank_apply
+
+    def init_leaf(p):
+        info = blocking.analyze(p.shape, cfg.block_size)
+        if info.kind == "diag":
+            return DiagLeafState(acc=jnp.zeros(p.shape, cfg.state_dtype))
+        S = info.num_blocks
+        ell_l = min(cfg.rank, info.bs_m)
+        ell_r = min(cfg.rank, info.bs_n)
+
+        def batched_fd(d, ell):
+            base = fd_init(d, ell, cfg.state_dtype)
+            return FDState(*[jnp.broadcast_to(x, (S,) + x.shape) for x in base])
+
+        return MatrixLeafState(
+            left=batched_fd(info.bs_m, ell_l),
+            right=batched_fd(info.bs_n, ell_r),
+            graft_acc=jnp.zeros(p.shape, cfg.state_dtype),
+        )
+
+    def init_fn(params):
+        leaves = tuple(init_leaf(p) for p in jax.tree.leaves(params))
+        return SketchyState(count=jnp.zeros([], jnp.int32), leaves=leaves)
+
+    def update_leaf(g, st, count):
+        g32 = g.astype(jnp.float32)
+        info = blocking.analyze(g.shape, cfg.block_size)
+        if info.kind == "diag":
+            acc = cfg.beta2 * st.acc + (1.0 - cfg.beta2) * jnp.square(g32)
+            direction = g32 * jax.lax.rsqrt(acc + cfg.graft_eps)
+            return direction.astype(g.dtype), DiagLeafState(acc=acc)
+
+        gb = blocking.to_blocks(g32, info)  # (S, bm, bn)
+        gbT = jnp.swapaxes(gb, -1, -2)
+
+        do_stats = (count % cfg.update_every) == 0
+
+        def with_stats(s):
+            return MatrixLeafState(
+                left=_vmapped_fd_update(s.left, gb, cfg.beta2, gram_fn),
+                right=_vmapped_fd_update(s.right, gbT, cfg.beta2, gram_fn),
+                graft_acc=s.graft_acc,
+            )
+
+        st = jax.lax.cond(do_stats, with_stats, lambda s: s, st)
+
+        pb = _precondition_blocks(st.left, st.right, gb, cfg, lowrank_fn)
+        precond = blocking.from_blocks(pb, info)
+
+        graft_dir, new_acc = _graft_direction(g32, st.graft_acc, cfg)
+        if cfg.graft != "none":
+            pnorm = jnp.linalg.norm(precond)
+            gnorm = jnp.linalg.norm(graft_dir)
+            precond = precond * (gnorm / (pnorm + 1e-16))
+
+        use_precond = count >= cfg.start_preconditioning_step
+        direction = jnp.where(use_precond, precond, graft_dir)
+        return direction.astype(g.dtype), MatrixLeafState(st.left, st.right, new_acc)
+
+    def update_fn(updates, state, params=None):
+        del params
+        flat, treedef = jax.tree.flatten(updates)
+        out_flat, new_leaves = [], []
+        for g, st in zip(flat, state.leaves):
+            d, ns = update_leaf(g, st, state.count)
+            out_flat.append(d)
+            new_leaves.append(ns)
+        return (jax.tree.unflatten(treedef, out_flat),
+                SketchyState(count=state.count + 1, leaves=tuple(new_leaves)))
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def second_moment_bytes(state: SketchyState) -> int:
+    """Bytes used for second-moment (covariance) tracking — the paper's
+    headline memory quantity (excludes grafting/momentum, as Fig. 1 does)."""
+    total = 0
+    for leaf in state.leaves:
+        if isinstance(leaf, MatrixLeafState):
+            for fs in (leaf.left, leaf.right):
+                total += fs.eigvecs.size * fs.eigvecs.dtype.itemsize
+                total += fs.eigvals.size * fs.eigvals.dtype.itemsize
+                total += fs.rho.size * fs.rho.dtype.itemsize
+        else:
+            total += leaf.acc.size * leaf.acc.dtype.itemsize
+    return total

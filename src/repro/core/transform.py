@@ -1,0 +1,171 @@
+"""Minimal optax-style gradient-transformation infrastructure.
+
+optax is not available offline; this module provides the same composable
+(init_fn, update_fn) contract so the rest of the framework can treat
+optimizers as pure pytree->pytree functions (jit/pjit friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations; state is a tuple of member states."""
+
+    def init_fn(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update_fn(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        return jax.tree.map(lambda u: u * factor, updates), state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None):
+        del params
+        step_size = schedule(state.count)
+        updates = jax.tree.map(lambda u: u * step_size, updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class TraceState(NamedTuple):
+    momentum: PyTree
+
+
+def momentum(beta1: float, *, ema: bool = True, dtype=None) -> GradientTransformation:
+    """Heavy-ball / EMA momentum.
+
+    ema=True matches the paper's ``moving_average_for_momentum``:
+    final update is ``beta1 * mu_t + (1 - beta1) * g_t``.
+    """
+
+    def init_fn(params):
+        return TraceState(
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params
+            )
+        )
+
+    def update_fn(updates, state, params=None):
+        del params
+        if ema:
+            mu = jax.tree.map(
+                lambda m, u: beta1 * m + (1.0 - beta1) * u.astype(m.dtype),
+                state.momentum, updates,
+            )
+            out = mu
+        else:
+            mu = jax.tree.map(
+                lambda m, u: beta1 * m + u.astype(m.dtype), state.momentum, updates
+            )
+            out = mu
+        out = jax.tree.map(lambda o, u: o.astype(u.dtype), out, updates)
+        return out, TraceState(momentum=mu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    """Decoupled weight decay (paper uses decoupled AdamW-style decay)."""
+
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return updates, state
+        updates = jax.tree.map(
+            lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params
+        )
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None):
+        del params
+        leaves = jax.tree.leaves(updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+        scale_f = jnp.minimum(1.0, max_norm / (gnorm + 1e-16))
+        updates = jax.tree.map(lambda u: (u * scale_f).astype(u.dtype), updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates (updates already carry the negative learning rate)."""
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Bundles a transformation with the convention update = -lr * direction."""
+
+    tx: GradientTransformation
+
+    def init(self, params):
+        return self.tx.init(params)
+
+    def update(self, grads, state, params):
+        return self.tx.update(grads, state, params)

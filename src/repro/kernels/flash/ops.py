@@ -1,0 +1,18 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_pallas
+from repro.kernels.flash.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True) -> jnp.ndarray:
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: Gram matrix C = A^T A with tiled reduction.
+
+This is the tall-skinny contraction at the heart of every FD update
+(DESIGN.md §3): M = [sqrt(beta2) B, G] is (d, ell+r) and we need its
+(ell+r, ell+r) Gram. The reduction dim d streams through VMEM in ``bd``
+tiles while each (bk x bk) output tile stays VMEM-resident and accumulates —
+MXU-aligned when tiles are multiples of 128 (default ell=256 is).
+
+Grid: (k_tiles_i, k_tiles_j, d_tiles); d is the innermost (sequential)
+dimension so the output block revision is legal ("arbitrary" semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(a_i_ref, a_j_ref, out_ref, *, n_d_tiles: int):
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_i = a_i_ref[...]  # (bd, bk)
+    a_j = a_j_ref[...]  # (bd, bk)
+    out_ref[...] += jax.lax.dot_general(
+        a_i, a_j, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bd", "interpret"))
+def gram_pallas(a: jnp.ndarray, *, bk: int = 128, bd: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """C = A^T A for A of shape (d, k). Pads to tile multiples."""
+    d, k = a.shape
+    bk = min(bk, max(k, 1))
+    bd = min(bd, max(d, 1))
+    pk = (-k) % bk
+    pd = (-d) % bd
+    if pk or pd:
+        a = jnp.pad(a, ((0, pd), (0, pk)))
+    dp, kp = a.shape
+    n_d_tiles = dp // bd
+    grid = (kp // bk, kp // bk, n_d_tiles)
+
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, n_d_tiles=n_d_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda i, j, di: (di, i)),
+            pl.BlockSpec((bd, bk), lambda i, j, di: (di, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bk), lambda i, j, di: (i, j)),
+        # accumulate in f32 regardless of input dtype (MXU-style)
+        out_shape=jax.ShapeDtypeStruct((kp, kp), jnp.float32),
+        interpret=interpret,
+    )(a, a)
+    return out[:k, :k]  # f32 accumulator result (FD consumes f32)

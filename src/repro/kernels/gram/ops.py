@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the gram kernel.
+
+On CPU (this container) the kernel executes in interpret mode for
+correctness validation; on TPU the same pallas_call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram(a: jnp.ndarray) -> jnp.ndarray:
+    """C = A^T A. Kernel on TPU, interpret-mode kernel elsewhere."""
+    return gram_pallas(a, interpret=not _on_tpu())

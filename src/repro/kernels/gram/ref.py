@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(a: jnp.ndarray) -> jnp.ndarray:
+    a32 = a.astype(jnp.float32)
+    return a32.T @ a32

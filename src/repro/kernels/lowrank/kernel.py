@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused low-rank + diagonal inverse-root apply.
+
+The Sketchy preconditioner application (DESIGN.md §3):
+
+    Y = base * G + U @ diag(coeffs) @ (U^T @ G)
+
+U is (d, ell) with ell <= 256 by default, so U (1024 x 256 fp32 = 1 MiB) and
+one (d, bn) tile of G stay VMEM-resident together; both matmuls and the
+diagonal scale fuse into a single pass over G — HBM traffic is exactly
+read(G) + read(U) + write(Y) instead of three round trips for the unfused
+projection / scale / expand chain.
+
+Grid: 1-D over column tiles of G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lowrank_kernel(u_ref, coeffs_ref, base_ref, g_ref, out_ref):
+    u = u_ref[...]                  # (d, ell)
+    g = g_ref[...]                  # (d, bn)
+    coeffs = coeffs_ref[...]        # (1, ell)
+    base = base_ref[0, 0]
+    # P = U^T G : (ell, bn)
+    proj = jax.lax.dot_general(u, g, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    proj = proj * coeffs.reshape(-1, 1)
+    expand = jax.lax.dot_general(u, proj, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    out_ref[...] = (base * g.astype(jnp.float32) + expand).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def lowrank_apply_pallas(u: jnp.ndarray, coeffs: jnp.ndarray, base: jnp.ndarray,
+                         g: jnp.ndarray, *, bn: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Y = base*G + U diag(coeffs) U^T G.  u: (d, ell), g: (d, n)."""
+    d, ell = u.shape
+    dg, n = g.shape
+    assert d == dg, (u.shape, g.shape)
+    bn = min(bn, max(n, 1))
+    pn = (-n) % bn
+    if pn:
+        g = jnp.pad(g, ((0, 0), (0, pn)))
+    np_ = g.shape[1]
+    coeffs2d = coeffs.reshape(1, ell).astype(jnp.float32)
+    base2d = jnp.asarray(base, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _lowrank_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((d, ell), lambda j: (0, 0)),
+            pl.BlockSpec((1, ell), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((d, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((d, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, np_), g.dtype),
+        interpret=interpret,
+    )(u, coeffs2d, base2d, g)
+    return out[:, :n]

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the fused low-rank preconditioner apply."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lowrank.kernel import lowrank_apply_pallas
+from repro.kernels.lowrank.ref import lowrank_apply_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
+                  g: jnp.ndarray) -> jnp.ndarray:
+    return lowrank_apply_pallas(u, coeffs, base, g, interpret=not _on_tpu())

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused low-rank + diagonal apply."""
+import jax.numpy as jnp
+
+
+def lowrank_apply_ref(u: jnp.ndarray, coeffs: jnp.ndarray, base,
+                      g: jnp.ndarray) -> jnp.ndarray:
+    proj = u.T @ g
+    return base * g + u @ (coeffs[:, None] * proj)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SSD chunk scan: the model's own chunked
+implementation (models/ssm.py), which is itself validated against decode."""
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd
+
+
+def ssd_ref(u: jnp.ndarray, dlog: jnp.ndarray, Bm: jnp.ndarray,
+            Cm: jnp.ndarray, chunk: int = 128) -> jnp.ndarray:
+    return ssd(u.astype(jnp.float32), dlog.astype(jnp.float32),
+               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+               chunk, unroll=True).astype(u.dtype)

@@ -1,0 +1,265 @@
+"""Dry-run lowering library (no XLA_FLAGS side effects — see dryrun.py CLI).
+
+Per (arch x shape x mesh) cell:
+  1. FULL lowering — production scan-over-layers graph; ``.lower().compile()``
+     must succeed; provides ``memory_analysis()`` (fits-per-device proof) and
+     the collective schedule.
+  2. PROBE lowerings — tiny unrolled configs whose costs are affine in the
+     per-block-type counts; solved and extrapolated to the full depth for
+     trip-count-exact flops / bytes / collective bytes (DESIGN.md §4).
+  3. Roofline terms + MODEL_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.core.factory import OptimizerConfig, make_optimizer
+from repro.launch import roofline
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.sharding import rules as rules_lib
+from repro.train import trainer as trainer_lib
+
+# per-shape logical-rule overrides (baseline policy)
+RULE_OVERRIDES = {
+    "long_500k": {"batch": None, "kv_seq": ("data", "model")},
+}
+
+
+def _repl(rules):
+    return NamedSharding(rules.mesh, P())
+
+
+def batch_shardings(specs: dict, rules: rules_lib.MeshRules) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if k == "positions":            # (3, B, S)
+            sh = rules.sharding(None, "batch", None)
+        else:
+            axes = ["batch"] + [None] * (v.ndim - 1)
+            sh = rules.sharding(*axes)
+        out[k] = rules_lib.enforce_divisible(sh, v.shape)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, struct: dict,
+                    rules: rules_lib.MeshRules) -> dict:
+    out = {}
+    for k, v in struct.items():
+        if k in ("k", "v"):             # (L, B, Smax, KV, hd)
+            sh = rules.sharding(None, "batch", "kv_seq", None, None)
+        elif k == "ssm":                # (L, B, H, P, N)
+            sh = rules.sharding(None, "batch", "heads", None, None)
+        elif k == "conv":               # (L, B, W-1, conv_dim)
+            sh = rules.sharding(None, "batch", None, "tensor")
+        else:
+            sh = _repl(rules)
+        out[k] = rules_lib.enforce_divisible(sh, v.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg: ModelConfig, shape: registry.ShapeCfg,
+               rules: rules_lib.MeshRules, opt_cfg: OptimizerConfig, *,
+               unroll: bool, donate: bool = True,
+               microbatches: Optional[int] = None):
+    """Build + lower one cell. Returns jax ``Lowered``."""
+    pstruct = model_lib.param_struct(cfg)
+    psh = rules_lib.tree_param_shardings(pstruct, rules)
+
+    if shape.kind == "train":
+        tx = make_optimizer(opt_cfg)
+        ostruct = jax.eval_shape(tx.init, pstruct)
+        osh = trainer_lib.train_state_shardings(ostruct, pstruct, rules)
+        bstruct = registry.input_specs(cfg, shape)
+        bsh = batch_shardings(bstruct, rules)
+        step = trainer_lib.make_train_step(cfg, tx, unroll=unroll,
+                                           microbatches=microbatches)
+        jf = jax.jit(step, in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        return jf.lower(pstruct, ostruct, bstruct)
+
+    if shape.kind == "prefill":
+        bstruct = registry.input_specs(cfg, shape)
+        bsh = batch_shardings(bstruct, rules)
+
+        def fwd(params, batch):
+            return model_lib.forward(cfg, params, batch, unroll=unroll)
+
+        jf = jax.jit(fwd, in_shardings=(psh, bsh))
+        return jf.lower(pstruct, bstruct)
+
+    if shape.kind == "decode":
+        bstruct = registry.input_specs(cfg, shape)
+        bsh = batch_shardings(bstruct, rules)
+        cstruct = cache_lib.cache_struct(cfg, shape.global_batch, shape.seq_len)
+        csh = cache_shardings(cfg, cstruct, rules)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, batch, pos):
+            return cache_lib.decode_step(cfg, params, cache, batch, pos,
+                                         unroll=unroll)
+
+        jf = jax.jit(serve_step,
+                     in_shardings=(psh, csh, bsh, _repl(rules)),
+                     out_shardings=(None, csh),
+                     donate_argnums=(1,) if donate else ())
+        return jf.lower(pstruct, cstruct, bstruct, pos)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Probe plans
+
+
+def probe_plan(cfg: ModelConfig) -> Tuple[List[Tuple[dict, Tuple[int, ...]]],
+                                          Tuple[int, ...]]:
+    """[(config replacements, counts), ...], full_counts."""
+    fam = cfg.family
+    L = cfg.num_layers
+    if fam in ("dense", "vlm", "audio", "ssm"):
+        probes = [({"num_layers": 1}, (1,)), ({"num_layers": 2}, (2,))]
+        return probes, (L,)
+    if fam == "moe":
+        fd = cfg.first_dense_layers
+        probes = [
+            ({"num_layers": 1, "first_dense_layers": 0}, (0, 1)),
+            ({"num_layers": 2, "first_dense_layers": 1}, (1, 1)),
+            ({"num_layers": 3, "first_dense_layers": 1}, (1, 2)),
+        ]
+        return probes, (fd, L - fd)
+    if fam == "hybrid":
+        # every probe keeps >= 1 shared-attention site (decode caches slice
+        # into the sites-only cache, which must be non-empty)
+        n_sites = len(cfg.shared_attn_layers())
+        probes = [
+            ({"num_layers": 1, "attn_every": 1}, (1, 1)),
+            ({"num_layers": 2, "attn_every": 1}, (2, 2)),
+            ({"num_layers": 2, "attn_every": 2}, (2, 1)),
+        ]
+        return probes, (L, n_sites)
+    raise ValueError(fam)
+
+
+def probe_costs(cfg: ModelConfig, shape: registry.ShapeCfg,
+                rules: rules_lib.MeshRules, opt_cfg: OptimizerConfig,
+                microbatches: Optional[int] = None) -> roofline.ProbeCost:
+    probes, full_counts = probe_plan(cfg)
+    counts, costs = [], []
+    for repl, cnt in probes:
+        pcfg = dataclasses.replace(cfg, **repl)
+        lowered = lower_cell(pcfg, shape, rules, opt_cfg, unroll=True,
+                             donate=False, microbatches=microbatches)
+        compiled = lowered.compile()
+        costs.append(roofline.cost_of(compiled))
+        counts.append(cnt)
+    return roofline.solve_affine(counts, costs, full_counts)
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             optimizer: str = "sketchy", mesh=None,
+             skip_probes: bool = False, skip_full: bool = False,
+             rule_overrides: Optional[dict] = None,
+             opt_overrides: Optional[dict] = None,
+             model_overrides: Optional[dict] = None,
+             microbatches: Optional[int] = None,
+             smoke: bool = False) -> Dict:
+    """Execute one dry-run cell; returns the report dict.
+    ``smoke``: reduced config + tiny shape (integration tests)."""
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = registry.get_reduced(arch) if smoke else registry.get_config(arch)
+    if model_overrides:
+        cfg = dataclasses.replace(cfg, **model_overrides)
+    shape = registry.SHAPES[shape_name]
+    if smoke:
+        shape = registry.ShapeCfg(shape.name, seq_len=64, global_batch=8,
+                                  kind=shape.kind)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name,
+                "skipped": "full-attention arch; long_500k requires "
+                           "sub-quadratic attention (DESIGN.md §5)"}
+
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    overrides = dict(RULE_OVERRIDES.get(shape_name, {}))
+    overrides.update(rule_overrides or {})
+
+    opt_kwargs = dict(name=optimizer, rank=256 if not smoke else 8,
+                      block_size=1024 if not smoke else 32,
+                      update_every=10, total_steps=10000)
+    opt_kwargs.update(opt_overrides or {})
+    opt_cfg = OptimizerConfig(**opt_kwargs)
+
+    report: Dict = {"arch": arch, "shape": shape_name,
+                    "mesh": "x".join(map(str, mesh.devices.shape)),
+                    "axes": list(mesh.axis_names), "chips": int(n_chips),
+                    "optimizer": optimizer, "kind": shape.kind}
+
+    with rules_lib.use_mesh(mesh, overrides) as rules:
+        if not skip_full:
+            t0 = time.time()
+            lowered = lower_cell(cfg, shape, rules, opt_cfg, unroll=False,
+                                 microbatches=microbatches)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            report["full"] = {
+                "lower_s": round(t1 - t0, 2),
+                "compile_s": round(t2 - t1, 2),
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "peak_bytes_per_device": int(
+                    getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)
+                    - getattr(mem, "alias_size_in_bytes", 0)),
+                "scan_cost_raw": dataclasses.asdict(
+                    roofline.cost_of(compiled)),
+            }
+
+        if not skip_probes:
+            t0 = time.time()
+            cost = probe_costs(cfg, shape, rules, opt_cfg, microbatches)
+            report["probe_s"] = round(time.time() - t0, 2)
+            terms = roofline.roofline_terms(cost)
+            report["cost"] = {"flops_per_device": cost.flops,
+                              "bytes_per_device": cost.bytes_accessed,
+                              "collective_bytes_per_device": cost.coll}
+            report["roofline"] = terms
+
+            # MODEL_FLOPS vs compiled-flops ratio (useful-compute fraction)
+            tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                           else 1)
+            mf = cfg.model_flops_per_token(
+                shape.seq_len, training=(shape.kind == "train"),
+                decode=(shape.kind == "decode")) * tokens
+            report["model_flops_total"] = mf
+            hlo_total = cost.flops * n_chips
+            report["hlo_flops_total"] = hlo_total
+            report["useful_flops_ratio"] = (mf / hlo_total) if hlo_total else 0.0
+            # roofline fraction: ideal time on dominant term vs bound
+            ideal = mf / (n_chips * roofline.PEAK_FLOPS)
+            report["ideal_compute_s"] = ideal
+            report["roofline_fraction"] = (
+                ideal / terms["bound_s"] if terms["bound_s"] else 0.0)
+
+    return report

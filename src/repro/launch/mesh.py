@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+does not touch jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / small-scale runs."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D 'data' mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,43 @@
+"""Batched-serving launcher (CPU-scale demo; 32k/500k decode via dryrun.py)."""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="paper-lm-100m")
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=64)
+    p.add_argument("--new-tokens", type=int, default=12)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    import numpy as np
+    import jax
+
+    from repro.configs import registry
+    from repro.models import model as model_lib
+    from repro.serve.engine import Engine, Request
+
+    cfg = registry.get_reduced(args.arch) if args.reduced \
+        else registry.get_config(args.arch)
+    if not cfg.embed_inputs or cfg.num_codebooks:
+        raise SystemExit("serve demo supports token-input archs")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = Engine(cfg, params, max_seq=args.max_seq, batch=args.batch)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,),
+                                        dtype=np.int32),
+                    max_new_tokens=args.new_tokens)
+            for _ in range(args.batch)]
+    results = engine.generate(reqs)
+    for i, r in enumerate(results):
+        print(f"request {i}: prompt={list(map(int, reqs[i].prompt))} "
+              f"-> {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

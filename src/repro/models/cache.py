@@ -1,0 +1,207 @@
+"""Decode caches + single-token decode step for every family.
+
+Cache layouts (stacked over layers for lax.scan):
+  attention: k/v (L, B, Smax, KV, hd) — seq dim SP-shardable ('kv_seq')
+  mamba:     ssm (L, B, H, P, N) + conv (L, B, W-1, conv_dim)
+  hybrid:    mamba caches for all L layers + attention k/v only at the
+             shared-attention sites (n_sites, B, Smax, KV, hd)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.model import _dtype, embed_tokens, project_logits
+from repro.sharding.rules import constrain
+
+PyTree = Any
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, tuple]:
+    L, B = cfg.num_layers, batch
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    shapes: Dict[str, tuple] = {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        shapes["k"] = (L, B, max_seq, KV, hd)
+        shapes["v"] = (L, B, max_seq, KV, hd)
+    elif fam == "ssm":
+        shapes["ssm"] = (L, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+        shapes["conv"] = (L, B, cfg.ssm_conv_width - 1,
+                          cfg.d_inner + 2 * cfg.ssm_state)
+    elif fam == "hybrid":
+        n_sites = len(cfg.shared_attn_layers())
+        shapes["ssm"] = (L, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+        shapes["conv"] = (L, B, cfg.ssm_conv_width - 1,
+                          cfg.d_inner + 2 * cfg.ssm_state)
+        shapes["k"] = (n_sites, B, max_seq, KV, hd)
+        shapes["v"] = (n_sites, B, max_seq, KV, hd)
+    else:
+        raise ValueError(fam)
+    return shapes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    dt = _dtype(cfg)
+
+    def mk(name, s):
+        dtype = jnp.float32 if name in ("ssm",) else dt
+        return jnp.zeros(s, dtype)
+
+    return {k: mk(k, s) for k, s in cache_shapes(cfg, batch, max_seq).items()}
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    dt = _dtype(cfg)
+    out = {}
+    for k, s in cache_shapes(cfg, batch, max_seq).items():
+        out[k] = jax.ShapeDtypeStruct(s, jnp.float32 if k == "ssm" else dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, cache: PyTree, batch, pos, *,
+                unroll: bool = False):
+    """One-token decode. batch: {'token': (B,1) / (B,1,K) / 'embed': (B,1,D)}.
+    pos: scalar int32 — current write position (cache holds [0, pos) tokens).
+    ``unroll=True`` replaces layer scans with Python loops (roofline probes).
+    Returns (logits, new_cache)."""
+    tok_batch = dict(batch)
+    if "token" in tok_batch:
+        tok_batch["tokens"] = tok_batch.pop("token")
+    if "embed" in tok_batch:
+        tok_batch["embeds"] = tok_batch.pop("embed")
+    x = embed_tokens(cfg, params, tok_batch)     # (B, 1, D)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        x, new_cache = _decode_attn_stack(cfg, params, cache, x, pos, unroll)
+    elif fam == "ssm":
+        x, new_cache = _decode_ssm_stack(cfg, params, cache, x, unroll)
+    elif fam == "hybrid":
+        x, new_cache = _decode_hybrid_stack(cfg, params, cache, x, pos, unroll)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return project_logits(cfg, params, x), new_cache
+
+
+def _attn_sublayer_decode(cfg, p, x, ck, cv, pos):
+    h = rms_norm(x, p["norm1"] if "norm1" in p else p["norm"], cfg.norm_eps)
+    out, ck, cv = attn_lib.attention_decode(cfg, p["attn"], h, ck, cv, pos)
+    return x + out, ck, cv
+
+
+def _mlp_sublayer_decode(cfg, p, x):
+    from repro.models.layers import gated_mlp
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + gated_mlp(cfg, p["mlp"], h)
+
+
+def _moe_sublayer_decode(cfg, p, x):
+    from repro.models.moe import moe_block
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + moe_block(cfg, p["moe"], h)
+
+
+def _unrolled_scan(body, x, xs_tree):
+    """Python-loop drop-in for lax.scan(body, x, xs) (probe mode)."""
+    n = jax.tree.leaves(xs_tree)[0].shape[0]
+    outs = []
+    for i in range(n):
+        xs_i = jax.tree.map(lambda a: a[i], xs_tree)
+        x, out = body(x, xs_i)
+        outs.append(out)
+    stacked = jax.tree.map(lambda *ys: jnp.stack(ys, 0), *outs)
+    return x, stacked
+
+
+def _decode_attn_stack(cfg, params, cache, x, pos, unroll=False):
+    scan = _unrolled_scan if unroll else jax.lax.scan
+
+    def body(x, xs):
+        p_i, ck, cv = xs
+        x, ck, cv = _attn_sublayer_decode(cfg, p_i, x, ck, cv, pos)
+        if "moe" in p_i:
+            x = _moe_sublayer_decode(cfg, p_i, x)
+        else:
+            x = _mlp_sublayer_decode(cfg, p_i, x)
+        return x, (ck, cv)
+
+    if cfg.family == "moe":
+        ks, vs = cache["k"], cache["v"]
+        fd = cfg.first_dense_layers
+        if fd:
+            x, (k1, v1) = scan(
+                body, x, (params["dense_layers"], ks[:fd], vs[:fd]))
+            x, (k2, v2) = scan(
+                body, x, (params["moe_layers"], ks[fd:], vs[fd:]))
+            new_k = jnp.concatenate([k1, k2], 0)
+            new_v = jnp.concatenate([v1, v2], 0)
+        else:
+            x, (new_k, new_v) = scan(
+                body, x, (params["moe_layers"], ks, vs))
+    else:
+        x, (new_k, new_v) = scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    return x, {"k": new_k, "v": new_v}
+
+
+def _decode_ssm_stack(cfg, params, cache, x, unroll=False):
+    scan = _unrolled_scan if unroll else jax.lax.scan
+
+    def body(x, xs):
+        p_i, st, cs = xs
+        h = rms_norm(x, p_i["norm"], cfg.norm_eps)
+        out, st, cs = ssm_lib.mamba_decode(cfg, p_i["mixer"], h, st, cs)
+        return x + out, (st, cs)
+
+    x, (ssm, conv) = scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    return x, {"ssm": ssm, "conv": conv}
+
+
+def _decode_hybrid_stack(cfg, params, cache, x, pos, unroll=False):
+    scan = _unrolled_scan if unroll else jax.lax.scan
+    L = cfg.num_layers
+    sites = cfg.shared_attn_layers()
+    is_site = jnp.array([i in sites for i in range(L)])
+    site_idx = jnp.array([sites.index(i) if i in sites else 0
+                          for i in range(L)], jnp.int32)
+    shared = params["shared_attn"]
+
+    def body(carry, xs):
+        x, ak, av = carry
+        p_i, st, cs, flag, sidx = xs
+
+        def with_attn(args):
+            x, ak, av = args
+            ck = jax.lax.dynamic_index_in_dim(ak, sidx, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(av, sidx, 0, keepdims=False)
+            h = rms_norm(x, shared["norm1"], cfg.norm_eps)
+            out, ck, cv = attn_lib.attention_decode(cfg, shared["attn"], h,
+                                                    ck, cv, pos)
+            ak = jax.lax.dynamic_update_index_in_dim(ak, ck, sidx, 0)
+            av = jax.lax.dynamic_update_index_in_dim(av, cv, sidx, 0)
+            x = x + out
+            x = _mlp_sublayer_decode(cfg, shared, x)
+            return x, ak, av
+
+        x, ak, av = jax.lax.cond(flag, with_attn, lambda a: a, (x, ak, av))
+        h = rms_norm(x, p_i["norm"], cfg.norm_eps)
+        out, st, cs = ssm_lib.mamba_decode(cfg, p_i["mixer"], h, st, cs)
+        return (x + out, ak, av), (st, cs)
+
+    (x, ak, av), (ssm, conv) = scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], cache["ssm"], cache["conv"], is_site, site_idx))
+    return x, {"ssm": ssm, "conv": conv, "k": ak, "v": av}

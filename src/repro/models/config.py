@@ -1,0 +1,173 @@
+"""Architecture config schema + analytic FLOP/param accounting."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    mrope: bool = False          # qwen2-vl M-RoPE (3 position streams)
+    # mlp
+    d_ff: int = 0
+    mlp_act: str = "swiglu"      # swiglu | geglu
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    first_dense_layers: int = 0
+    dense_ff: int = 0            # d_ff of the dense (non-MoE) layers
+    capacity_factor: float = 1.25
+    moe_impl: str = "auto"       # auto (shard_map under a mesh) | gspmd
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): shared attention block applied every k mamba layers
+    attn_every: int = 0
+    # embeddings / heads / modality
+    tie_embeddings: bool = False
+    embed_scale: bool = False    # gemma: embeds * sqrt(d_model)
+    num_codebooks: int = 0       # musicgen: parallel EnCodec codebooks
+    embed_inputs: bool = True    # False: frontend stub feeds embeddings (vlm)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True           # activation checkpointing per layer
+    remat_policy: str = "full"   # full (save nothing) | dots (save matmul outs)
+    # attention impl knobs
+    q_chunk: int = 2048          # q-chunked causal attention block
+    attn_logits_dtype: str = "float32"   # materialized softmax dtype in the
+    # jnp fallback path (the Pallas flash kernel keeps f32 in VMEM only);
+    # "bfloat16" halves the dominant HBM term for long-S training
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid-with-shared-attn)."""
+        return self.family in ("ssm", "hybrid")
+
+    def block_pattern(self) -> Tuple[Tuple[str, int], ...]:
+        """((block_type, count), ...) — drives both the model composition and
+        the probe cost solver (DESIGN.md §4)."""
+        L = self.num_layers
+        if self.family in ("dense", "vlm", "audio"):
+            return (("dense", L),)
+        if self.family == "moe":
+            fd = self.first_dense_layers
+            return (("dense", fd), ("moe", L - fd)) if fd else (("moe", L),)
+        if self.family == "ssm":
+            return (("mamba", L),)
+        if self.family == "hybrid":
+            n_attn = len(self.shared_attn_layers())
+            return (("mamba", L), ("shared_attn", n_attn))
+        raise ValueError(self.family)
+
+    def shared_attn_layers(self) -> Tuple[int, ...]:
+        if self.family != "hybrid" or not self.attn_every:
+            return ()
+        return tuple(range(0, self.num_layers, self.attn_every))
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameter count (exact for our parameterization)."""
+        D, V = self.d_model, self.vocab_size
+        total = 0
+        # embeddings (+ untied head)
+        n_embed = max(self.num_codebooks, 1)
+        total += n_embed * V * D
+        if not self.tie_embeddings:
+            total += n_embed * V * D
+        total += D  # final norm
+        for kind, count in self.block_pattern():
+            # shared_attn weights are reused across sites: counted once
+            n = 1 if kind == "shared_attn" else count
+            total += n * self.block_params(kind)
+        return total
+
+    def block_params(self, kind: str) -> int:
+        D = self.d_model
+        H, KV, hd = self.num_heads, self.num_kv_heads, self.head_dim
+        if kind == "dense":
+            attn = D * (H + 2 * KV) * hd + H * hd * D
+            if self.qkv_bias:
+                attn += (H + 2 * KV) * hd
+            mlp = 3 * D * self.d_ff
+            return attn + mlp + 2 * D  # two norms
+        if kind == "moe":
+            attn = D * (H + 2 * KV) * hd + H * hd * D
+            if self.qkv_bias:
+                attn += (H + 2 * KV) * hd
+            router = D * self.num_experts
+            experts = self.num_experts * 3 * D * self.d_ff
+            shared = self.num_shared_experts * 3 * D * self.d_ff
+            return attn + router + experts + shared + 2 * D
+        if kind == "mamba":
+            din, N, Hs = self.d_inner, self.ssm_state, self.ssm_heads
+            in_proj = D * (2 * din + 2 * N + Hs)
+            conv = self.ssm_conv_width * (din + 2 * N)
+            out_proj = din * D
+            extras = 3 * Hs + din  # A_log, dt_bias, D, gated-norm scale
+            return in_proj + conv + out_proj + extras + D
+        if kind == "shared_attn":
+            # zamba2 shared transformer block: attention + MLP, stored once
+            attn = D * (H + 2 * KV) * hd + H * hd * D
+            return attn + 3 * D * self.d_ff + 2 * D
+        raise ValueError(kind)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        D = self.d_model
+        total = self.param_count()
+        inactive = (self.num_experts - self.experts_per_token)
+        per_expert = 3 * D * self.d_ff
+        moe_layers = sum(c for k, c in self.block_pattern() if k == "moe")
+        total -= moe_layers * inactive * per_expert
+        return total
+
+    def model_flops_per_token(self, seq_len: int, *, training: bool,
+                              decode: bool = False) -> float:
+        """MODEL_FLOPS per token: 6·N_active (train) / 2·N_active (fwd)
+        + attention term. ``decode``: one-token step against a seq_len cache."""
+        N = self.active_param_count()
+        base = (6 if training else 2) * N
+        # attention flops per token: 2 matmuls * 2 flops * window
+        H, hd = self.num_heads, self.head_dim
+        n_attn = 0
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            n_attn = self.num_layers
+        elif self.family == "hybrid":
+            n_attn = len(self.shared_attn_layers())
+        window = seq_len if decode else seq_len / 2  # causal average
+        attn = (3 if training else 1) * n_attn * 4 * H * hd * window
+        # ssd flops per token: state update + output, linear in state
+        n_ssm = self.num_layers if self.family in ("ssm", "hybrid") else 0
+        ssd = (3 if training else 1) * n_ssm * 6 * self.d_inner * self.ssm_state
+        return base + attn + ssd

@@ -1,0 +1,72 @@
+"""Shared layers: norms, RoPE / M-RoPE, gated MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections=None) -> jnp.ndarray:
+    """x: (B, S, H, hd). positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 rotary frequencies are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream. For the text-only backbone all three streams coincide.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 2:                              # plain RoPE
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:                                                # M-RoPE (3, B, S)
+        n = hd // 2
+        if mrope_sections is None:
+            s1 = n // 4
+            s2 = (n - s1) // 2
+            mrope_sections = (s1, s2, n - s1 - s2)      # qwen2-vl-like split
+        parts = []
+        start = 0
+        for stream, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            parts.append(positions[stream][..., None].astype(jnp.float32) * f)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)        # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+
+
+def gated_mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.sharding.rules import constrain
+
+    act = jax.nn.silu if cfg.mlp_act == "swiglu" else \
+        (lambda v: jax.nn.gelu(v, approximate=True))
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = act(gate) * up
+    h = constrain(h, "batch", "seq", "tensor")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(out, "batch", "seq", "embed")

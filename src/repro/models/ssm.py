@@ -1,0 +1,177 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) blocks.
+
+Chunked SSD: within-chunk attention-like term + inter-chunk state recurrence
+(lax.scan over chunks; Python loop in probe mode so cost_analysis sees every
+chunk — DESIGN.md §4). Single B/C group (n_groups=1) as in mamba2-370m.
+
+Decode keeps O(H·P·N) recurrent state + a (w-1)-token conv window — this is
+what makes the long_500k cells feasible for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.sharding.rules import constrain
+
+
+def ssm_params_shape(cfg: ModelConfig) -> dict:
+    D, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * N
+    return {
+        "in_proj": (D, 2 * din + 2 * N + H),
+        "conv_w": (cfg.ssm_conv_width, conv_dim),
+        "conv_b": (conv_dim,),
+        "A_log": (H,),
+        "dt_bias": (H,),
+        "ssm_D": (H,),
+        "gate_norm": (din,),
+        "out_proj": (din, D),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = init_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunk(u_c, dlog_c, B_c, C_c, state):
+    """One SSD chunk. u_c: (B,Q,H,P); dlog_c: (B,Q,H); B_c/C_c: (B,Q,N);
+    state: (B,H,P,N). Returns (y_c, new_state)."""
+    A_cs = jnp.cumsum(dlog_c, axis=1)                    # (B,Q,H)
+    # intra-chunk: y[q] = sum_{s<=q} (C_q.B_s) exp(A_cs[q]-A_cs[s]) u[s]
+    scores = jnp.einsum("bqn,bsn->bqs", C_c, B_c)        # (B,Q,S)
+    dec = A_cs[:, :, None, :] - A_cs[:, None, :, :]      # (B,Q,S,H)
+    Q = u_c.shape[1]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, :, :, None], jnp.exp(dec), 0.0)
+    y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", scores, L, u_c)
+    # inter-chunk: contribution of carried state
+    dec_q = jnp.exp(A_cs)                                 # (B,Q,H)
+    y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", C_c, dec_q, state)
+    # new state: decay old + within-chunk accumulation
+    dec_end = jnp.exp(A_cs[:, -1:, :] - A_cs)             # (B,Q,H)
+    new_state = jnp.einsum("bqh,bqn,bqhp->bhpn", dec_end, B_c, u_c) + \
+        jnp.exp(A_cs[:, -1])[:, :, None, None] * state
+    return y_intra + y_inter, new_state
+
+
+def ssd(u, dlog, Bm, Cm, chunk: int, *, unroll: bool):
+    """u: (B,S,H,P); dlog: (B,S,H); Bm/Cm: (B,S,N). Linear-time scan."""
+    B, S, H, P = u.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dlog = jnp.pad(dlog, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    n = Sp // Q
+    N = Bm.shape[-1]
+
+    uc = u.reshape(B, n, Q, H, P)
+    dc = dlog.reshape(B, n, Q, H)
+    Bc = Bm.reshape(B, n, Q, N)
+    Cc = Cm.reshape(B, n, Q, N)
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    if unroll or n == 1:
+        ys, state = [], state0
+        for i in range(n):
+            y, state = _ssd_chunk(uc[:, i].astype(jnp.float32),
+                                  dc[:, i].astype(jnp.float32),
+                                  Bc[:, i].astype(jnp.float32),
+                                  Cc[:, i].astype(jnp.float32), state)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        def body(state, xs):
+            u_i, d_i, B_i, C_i = xs
+            y, state = _ssd_chunk(u_i.astype(jnp.float32),
+                                  d_i.astype(jnp.float32),
+                                  B_i.astype(jnp.float32),
+                                  C_i.astype(jnp.float32), state)
+            return state, y
+
+        _, y = jax.lax.scan(body, state0,
+                            (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dc, 1, 0),
+                             jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+        y = jnp.moveaxis(y, 0, 1)
+    y = y.reshape(B, Sp, H, P)[:, :S]
+    return y.astype(u.dtype)
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jnp.ndarray, *,
+                unroll: bool) -> jnp.ndarray:
+    """Full Mamba2 mixer (train/prefill). x: (B, S, D)."""
+    B, S, D = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, "batch", "seq", "tensor")
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xc = xbc[..., :din]
+    Bm = xbc[..., din:din + N]
+    Cm = xbc[..., din + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                      # (H,)
+    u = xc.reshape(B, S, H, P)
+    y = ssd(u * dt[..., None].astype(u.dtype), dt * A, Bm, Cm,
+            cfg.ssm_chunk, unroll=unroll)
+    y = y + p["ssm_D"].astype(y.dtype)[None, None, :, None] * u
+    y = y.reshape(B, S, din)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                 ssm_state: jnp.ndarray, conv_state: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (B, 1, D); ssm_state: (B,H,P,N);
+    conv_state: (B, W-1, conv_dim)."""
+    B = x.shape[0]
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * N]      # (B,1,conv_dim)
+    dt_raw = zxbcdt[..., -H:]
+
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"]
+    conv_out = sum(window[:, i] * w[i] for i in range(w.shape[0]))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])[:, None]  # (B,1,conv_dim)
+    new_conv_state = window[:, 1:]
+
+    xc = conv_out[..., :din]
+    Bm = conv_out[..., din:din + N][:, 0]          # (B,N)
+    Cm = conv_out[..., din + N:][:, 0]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                            # (B,H)
+    u = xc.reshape(B, H, P).astype(jnp.float32) * dt[..., None]
+    new_state = a[:, :, None, None] * ssm_state + \
+        jnp.einsum("bhp,bn->bhpn", u, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + p["ssm_D"].astype(jnp.float32)[None, :, None] * \
+        xc.reshape(B, H, P).astype(jnp.float32)
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_state, new_conv_state

@@ -1,0 +1,85 @@
+"""Batched decode serving engine (small-scale runnable; the 32k/500k decode
+configurations are exercised via the dry-run).
+
+Prefill is executed through the decode path token-by-token in chunks of the
+request batch — adequate for the CPU example scale; on real hardware the
+prefill would lower ``forward`` + cache-write (see launch/dryrun.py's
+prefill cells for the compiled artifact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (P,) int32 prompt tokens
+    max_new_tokens: int = 16
+    temperature: float = 0.0    # 0 => greedy
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: List[int]
+
+
+class Engine:
+    """Static-batch engine: pads requests to a common grid and steps."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, batch: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self._step = jax.jit(
+            lambda p, c, b, pos: cache_lib.decode_step(cfg, p, c, b, pos))
+
+    def generate(self, requests: List[Request], seed: int = 0) -> List[Result]:
+        cfg = self.cfg
+        assert len(requests) <= self.batch
+        B = self.batch
+        cache = cache_lib.init_cache(cfg, B, self.max_seq)
+        prompts = [r.prompt for r in requests]
+        max_p = max(len(p) for p in prompts)
+        max_new = max(r.max_new_tokens for r in requests)
+        toks = np.zeros((B, max_p), np.int32)
+        plens = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            plens[i] = len(p)
+
+        outs: List[List[int]] = [[] for _ in range(B)]
+        key = jax.random.PRNGKey(seed)
+        last = jnp.asarray(toks[:, :1])
+        for pos in range(max_p + max_new - 1):
+            batch = {"token": last}
+            logits, cache = self._step(self.params, cache,
+                                       batch, jnp.asarray(pos, jnp.int32))
+            logits = logits[:, -1]
+            key, sub = jax.random.split(key)
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(sub, logits / max(
+                max(r.temperature for r in requests), 1e-6), axis=-1)
+            temp = max(r.temperature for r in requests)
+            nxt = np.asarray(sampled if temp > 0 else greedy)
+            cur = np.zeros((B,), np.int32)
+            for i in range(B):
+                if pos + 1 < plens[i]:
+                    cur[i] = toks[i, pos + 1]       # still prefilling
+                else:
+                    cur[i] = nxt[i]
+                    if i < len(requests) and \
+                            len(outs[i]) < requests[i].max_new_tokens:
+                        outs[i].append(int(nxt[i]))
+            last = jnp.asarray(cur)[:, None]
+        return [Result(tokens=outs[i]) for i in range(len(requests))]

@@ -1,0 +1,99 @@
+"""Elastic scaling + straggler mitigation.
+
+Elastic re-mesh: on failure/resize, rebuild a mesh from the devices that are
+actually alive and reshard the checkpointed state onto it. Checkpoints are
+mesh-agnostic (train/checkpoint.py), so the only work is recomputing the
+sharding trees for the new mesh and ``device_put``-ing on restore. The mesh
+chooser keeps the model axis fixed (TP degree is architectural) and absorbs
+device loss in the data axis — batch is rebalanced via the data pipeline's
+``num_hosts`` arg.
+
+Straggler mitigation: ``StragglerMonitor`` tracks per-step wall-times with a
+robust (median + MAD) detector; steps beyond ``k`` sigmas are logged and
+counted, and the trainer can skip a lagging host's shard by reassigning its
+data range (deterministic pipeline ⇒ any host can generate any shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    global_batch: int
+    note: str = ""
+
+
+def plan_mesh(num_devices: int, *, model_parallel: int,
+              target_global_batch: int, pods: int = 1) -> ElasticPlan:
+    """Largest (pod, data, model) mesh that fits the surviving devices.
+
+    model_parallel is fixed (weights are laid out for it); data-parallel
+    degree absorbs the loss. Global batch stays constant (per-device batch
+    grows) unless it stops dividing, in which case it is rounded down to the
+    nearest multiple of the new dp degree.
+    """
+    per_pod = num_devices // pods
+    dp = per_pod // model_parallel
+    if dp < 1:
+        raise ValueError(
+            f"{num_devices} devices cannot host model_parallel={model_parallel}")
+    batch = target_global_batch
+    total_dp = dp * pods
+    if batch % total_dp:
+        batch = max((batch // total_dp), 1) * total_dp
+    if pods > 1:
+        return ElasticPlan((pods, dp, model_parallel),
+                           ("pod", "data", "model"), batch,
+                           note=f"elastic: {num_devices} devices -> "
+                                f"{pods}x{dp}x{model_parallel}")
+    return ElasticPlan((dp, model_parallel), ("data", "model"), batch,
+                       note=f"elastic: {num_devices} devices -> "
+                            f"{dp}x{model_parallel}")
+
+
+def remesh(plan: ElasticPlan, devices: Optional[Sequence] = None):
+    devices = list(devices if devices is not None else jax.devices())
+    n = int(np.prod(plan.mesh_shape))
+    grid = np.asarray(devices[:n]).reshape(plan.mesh_shape)
+    return jax.sharding.Mesh(grid, plan.axis_names)
+
+
+class StragglerMonitor:
+    """Robust per-step latency anomaly detector (median + MAD)."""
+
+    def __init__(self, window: int = 50, k: float = 6.0):
+        self.window = window
+        self.k = k
+        self.times: List[float] = []
+        self.flagged = 0
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> Optional[float]:
+        """Returns the step time; increments ``flagged`` when anomalous."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        hist = self.times[-self.window:]
+        if len(hist) >= 10:
+            med = float(np.median(hist))
+            mad = float(np.median(np.abs(np.asarray(hist) - med))) + 1e-9
+            if dt > med + self.k * 1.4826 * mad:
+                self.flagged += 1
+        self.times.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0

@@ -1,0 +1,165 @@
+"""Training step construction + distributed state sharding.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) ->
+(params', opt_state', metrics) function: fwd+bwd (remat per layer inside the
+model), optional microbatched gradient accumulation, optimizer update.
+
+``train_state_shardings`` assigns NamedShardings to every optimizer-state
+leaf by type dispatch: param-shaped leaves (momentum, grafting) inherit the
+parameter sharding; Sketchy/Shampoo per-block factors shard their leading
+blocks dim over the fsdp axis ('data') so second-moment state is fully
+distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sketchy as sketchy_lib
+from repro.core import shampoo as shampoo_lib
+from repro.core import adam as adam_lib
+from repro.core.fd import FDState
+from repro.core.transform import (GradientTransformation, ScaleByScheduleState,
+                                  TraceState, EmptyState, apply_updates)
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.sharding import rules as rules_lib
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
+                    unroll: bool = False,
+                    microbatches: Optional[int] = None) -> Callable:
+    def loss_of(params, batch):
+        return model_lib.loss_fn(cfg, params, batch, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        if microbatches and microbatches > 1:
+            def split(key, x):
+                axis = 1 if key == "positions" else 0  # positions: (3, B, S)
+                assert x.shape[axis] % microbatches == 0, \
+                    f"batch dim {x.shape[axis]} not divisible by {microbatches}"
+                if axis == 0:
+                    return x.reshape(microbatches, x.shape[0] // microbatches,
+                                     *x.shape[1:])
+                r = x.reshape(x.shape[0], microbatches,
+                              x.shape[1] // microbatches, *x.shape[2:])
+                return jnp.moveaxis(r, 1, 0)
+
+            mb = {k: split(k, v) for k, v in batch.items()}
+            zero = jax.tree.map(jnp.zeros_like, params)
+
+            def body(acc, mbatch):
+                loss, grads = jax.value_and_grad(loss_of)(params, mbatch)
+                acc_loss, acc_g = acc
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            if unroll:  # probe mode: cost_analysis must see every microbatch
+                acc = (jnp.zeros([], jnp.float32), zero)
+                for i in range(microbatches):
+                    acc, _ = body(acc, jax.tree.map(lambda x: x[i], mb))
+                loss_sum, gsum = acc
+            else:
+                (loss_sum, gsum), _ = jax.lax.scan(
+                    body, (jnp.zeros([], jnp.float32), zero), mb)
+            inv = 1.0 / microbatches
+            loss = loss_sum * inv
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        updates, new_opt_state = tx.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assignment for optimizer state
+
+
+def _blocks_sharding(rules: rules_lib.MeshRules, leaf) -> NamedSharding:
+    """Leading blocks dim over model-major (model, data) tiling (when
+    divisible; falls back to data-only, then replicated). Model-major matches
+    the expert-major flattening of EP-sharded parameters, keeping the
+    grad->block re-layout local."""
+    ndim = leaf.ndim
+    if not ndim:
+        return NamedSharding(rules.mesh, P())
+    for axis in ("opt_blocks", "fsdp"):
+        spec = rules.spec(*([axis] + [None] * (ndim - 1)))
+        sh = rules_lib.enforce_divisible(NamedSharding(rules.mesh, spec),
+                                         leaf.shape)
+        if sh.spec[0] is not None:
+            return sh
+    return NamedSharding(rules.mesh, P(*([None] * ndim)))
+
+
+def train_state_shardings(opt_state: PyTree, params: PyTree,
+                          rules: rules_lib.MeshRules) -> PyTree:
+    """NamedShardings for an optimizer-state pytree (works on structs)."""
+    param_shardings = rules_lib.tree_param_shardings(params, rules)
+    flat_param_sh = jax.tree.leaves(
+        param_shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    repl = NamedSharding(rules.mesh, P())
+
+    def fd_sharding(fs: FDState) -> FDState:
+        return FDState(
+            eigvecs=_blocks_sharding(rules, fs.eigvecs),
+            eigvals=_blocks_sharding(rules, fs.eigvals),
+            rho=_blocks_sharding(rules, fs.rho),
+        )
+
+    def leaf_states(states):
+        out = []
+        for st, psh in zip(states, flat_param_sh):
+            if isinstance(st, sketchy_lib.MatrixLeafState):
+                out.append(sketchy_lib.MatrixLeafState(
+                    left=fd_sharding(st.left), right=fd_sharding(st.right),
+                    graft_acc=psh))
+            elif isinstance(st, sketchy_lib.DiagLeafState):
+                out.append(sketchy_lib.DiagLeafState(acc=psh))
+            elif isinstance(st, shampoo_lib.ShampooMatrixLeaf):
+                out.append(shampoo_lib.ShampooMatrixLeaf(
+                    L=_blocks_sharding(rules, st.L),
+                    R=_blocks_sharding(rules, st.R),
+                    PL=_blocks_sharding(rules, st.PL),
+                    PR=_blocks_sharding(rules, st.PR),
+                    graft_acc=psh))
+            elif isinstance(st, shampoo_lib.ShampooDiagLeaf):
+                out.append(shampoo_lib.ShampooDiagLeaf(acc=psh))
+            else:
+                raise TypeError(type(st))
+        return tuple(out)
+
+    def one(state):
+        if isinstance(state, sketchy_lib.SketchyState):
+            return sketchy_lib.SketchyState(count=repl,
+                                            leaves=leaf_states(state.leaves))
+        if isinstance(state, shampoo_lib.ShampooState):
+            return shampoo_lib.ShampooState(count=repl,
+                                            leaves=leaf_states(state.leaves))
+        if isinstance(state, adam_lib.AdamState):
+            return adam_lib.AdamState(count=repl, mu=param_shardings,
+                                      nu=param_shardings)
+        if isinstance(state, TraceState):
+            return TraceState(momentum=param_shardings)
+        if isinstance(state, ScaleByScheduleState):
+            return ScaleByScheduleState(count=repl)
+        if isinstance(state, EmptyState):
+            return EmptyState()
+        if isinstance(state, tuple) and not hasattr(state, "_fields"):
+            return tuple(one(s) for s in state)
+        # fallback: replicate any unknown scalar-ish state
+        return jax.tree.map(lambda _: repl, state)
+
+    return one(opt_state)

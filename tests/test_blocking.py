@@ -1,0 +1,38 @@
+"""Blocking roundtrip properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lead=st.lists(st.integers(1, 3), min_size=0, max_size=2),
+    m=st.integers(1, 70), n=st.integers(1, 70),
+    bs=st.sampled_from([8, 16, 32]),
+)
+def test_roundtrip(lead, m, n, bs):
+    shape = tuple(lead) + (m, n)
+    info = blocking.analyze(shape, bs)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=shape), jnp.float32)
+    if info.kind == "diag":
+        assert min(m, n) == 1 or len(shape) < 2
+        return
+    blocks = blocking.to_blocks(x, info)
+    assert blocks.shape == (info.num_blocks, info.bs_m, info.bs_n)
+    back = blocking.from_blocks(blocks, info)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_block_sizes_bounded():
+    info = blocking.analyze((5000, 3000), 1024)
+    assert info.bs_m <= 1024 and info.bs_n <= 1024
+    assert info.mb * info.bs_m >= 5000
+    assert info.nb * info.bs_n >= 3000
+
+
+def test_vectors_are_diag():
+    assert blocking.analyze((128,), 64).kind == "diag"
+    assert blocking.analyze((), 64).kind == "diag"
+    assert blocking.analyze((7, 1), 64).kind == "diag"

@@ -1,0 +1,73 @@
+"""Checkpointing: atomic roundtrip, async overlap, GC, restart cursor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                       "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)},
+            "opt": (jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                    jnp.asarray(3, jnp.int32))}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    state = _state()
+    ckpt.save(d, 7, state, extra={"data_step": 7})
+    restored, step, extra = ckpt.restore(d, _state(seed=1))
+    assert step == 7 and extra["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _state())
+    assert not [x for x in os.listdir(d) if x.startswith("tmp-")]
+
+
+def test_gc_keeps_last_three(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        ckpt.save(d, s, _state())
+    assert ckpt.all_steps(d) == [3, 4, 5]
+
+
+def test_latest_and_specific_step(tmp_path):
+    d = str(tmp_path)
+    s0, s1 = _state(0), _state(1)
+    ckpt.save(d, 1, s0)
+    ckpt.save(d, 2, s1)
+    r, step, _ = ckpt.restore(d, _state(2))
+    assert step == 2
+    r1, step1, _ = ckpt.restore(d, _state(2), step=1)
+    assert step1 == 1
+    np.testing.assert_array_equal(np.asarray(r1["params"]["w"]),
+                                  np.asarray(s0["params"]["w"]))
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path)
+    ac = ckpt.AsyncCheckpointer(d)
+    state = _state()
+    for s in (10, 20):
+        ac.save(s, state)
+    ac.wait()
+    assert ckpt.latest_step(d) == 20
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 0, _state())
+    bad = {"params": {"w": jnp.zeros((8, 4))}}
+    try:
+        ckpt.restore(d, bad)
+        assert False, "should have raised"
+    except ValueError:
+        pass

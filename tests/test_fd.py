@@ -1,0 +1,122 @@
+"""Property tests for the Frequent Directions core (paper Alg. 1, Lemma 1,
+Observation 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fd import (FDState, fd_apply_inverse_root, fd_covariance,
+                           fd_init, fd_update)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _stream(seed, d, T, decay=3.0):
+    rng = np.random.default_rng(seed)
+    basis = np.linalg.qr(rng.normal(size=(d, d)))[0]
+    scales = np.exp(-np.arange(d) / decay)
+    return [basis @ (scales * rng.normal(size=d)) for _ in range(T)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(8, 48),
+       ell=st.integers(2, 8), T=st.integers(5, 60))
+def test_lemma1_escaped_mass_bound(seed, d, ell, T):
+    """rho_{1:T} <= min_k sum_{i>k} lambda_i / (ell - k)  (Lemma 1)."""
+    ell = min(ell, d)
+    st_ = fd_init(d, ell)
+    G = np.zeros((d, d))
+    for g in _stream(seed, d, T):
+        G += np.outer(g, g)
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+    lam = np.maximum(np.linalg.eigvalsh(G)[::-1], 0)
+    bound = min(lam[k:].sum() / (ell - k) for k in range(ell))
+    assert float(st_.rho) <= bound * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fd_operator_norm_error(seed):
+    """||G - Gbar||_op <= rho_{1:T} (FD fundamental guarantee)."""
+    d, ell, T = 32, 8, 100
+    st_ = fd_init(d, ell)
+    G = np.zeros((d, d))
+    for g in _stream(seed, d, T):
+        G += np.outer(g, g)
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+    err = np.linalg.norm(G - np.asarray(fd_covariance(st_)), 2)
+    assert err <= float(st_.rho) * (1 + 1e-4) + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), beta2=st.sampled_from([0.9, 0.99, 0.999]))
+def test_ema_fd_obs6(seed, beta2):
+    """|| Gbar^{(b2)} - G^{(b2)} ||_op <= rho^{(b2)}_{1:T}  (Obs. 6)."""
+    d, ell, T = 24, 6, 80
+    st_ = fd_init(d, ell)
+    G = np.zeros((d, d))
+    for g in _stream(seed, d, T):
+        G = beta2 * G + np.outer(g, g)
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32), beta2=beta2)
+    err = np.linalg.norm(G - np.asarray(fd_covariance(st_)), 2)
+    assert err <= float(st_.rho) * (1 + 1e-4) + 1e-4
+
+
+def test_sketch_invariants():
+    """Eigvecs orthonormal, eigvals descending with zero tail, rho monotone
+    (beta2=1)."""
+    d, ell = 40, 10
+    st_ = fd_init(d, ell)
+    prev_rho = 0.0
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        g = rng.normal(size=d)
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+        s = np.asarray(st_.eigvals)
+        assert np.all(np.diff(s) <= 1e-4 * max(s.max(), 1.0))
+        assert abs(s[-1]) < 1e-4 * max(s.max(), 1.0)
+        # pseudo-orthonormal: U^T U == diag with entries in {0, 1}
+        # (columns are zero until the stream fills the sketch rank)
+        G = np.asarray(st_.eigvecs).T @ np.asarray(st_.eigvecs)
+        diag = np.diag(G)
+        assert np.all((np.abs(diag - 1) < 5e-3) | (np.abs(diag) < 5e-3))
+        off = G - np.diag(diag)
+        assert np.abs(off).max() < 5e-3
+        assert float(st_.rho) >= prev_rho - 1e-6
+        prev_rho = float(st_.rho)
+
+
+def test_full_rank_exact():
+    """ell >= stream rank => sketch is exact and rho == 0 (paper §3.3
+    remark: low-rank G_T needs no sketching error)."""
+    d, r, ell = 20, 4, 8
+    rng = np.random.default_rng(1)
+    W = np.linalg.qr(rng.normal(size=(d, r)))[0]
+    st_ = fd_init(d, ell)
+    G = np.zeros((d, d))
+    for _ in range(30):
+        g = W @ rng.normal(size=r)
+        G += np.outer(g, g)
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+    assert float(st_.rho) < 1e-4
+    np.testing.assert_allclose(np.asarray(fd_covariance(st_)), G,
+                               atol=1e-3 * np.linalg.norm(G, 2))
+
+
+@pytest.mark.parametrize("exponent", [-0.25, -0.5, -1.0])
+def test_inverse_root_apply_matches_dense(exponent):
+    """(Gbar + (rho+eps)I)^p @ X via factored form == dense eigh result."""
+    d, ell = 24, 6
+    st_ = fd_init(d, ell)
+    rng = np.random.default_rng(2)
+    for g in _stream(3, d, 40):
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+    eps = 1e-3
+    X = jnp.asarray(rng.normal(size=(d, 5)), jnp.float32)
+    got = fd_apply_inverse_root(st_, X, exponent=exponent, eps=eps)
+    dense = np.asarray(fd_covariance(st_), np.float64) + \
+        (float(st_.rho) + eps) * np.eye(d)
+    lam, V = np.linalg.eigh(dense)
+    want = (V * lam ** exponent) @ V.T @ np.asarray(X, np.float64)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-4)

@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp ref oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash.kernel import flash_attention_pallas
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.lowrank.kernel import lowrank_apply_pallas
+from repro.kernels.lowrank.ref import lowrank_apply_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("d,k", [(16, 4), (64, 16), (100, 30), (257, 96),
+                                 (1024, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(d, k, dtype):
+    a = jnp.asarray(RNG.normal(size=(d, k)), dtype)
+    got = gram_pallas(a, bk=32, bd=64)      # f32 accumulator result
+    want = gram_ref(a)
+    assert got.dtype == jnp.float32
+    tol = 1e-4 * np.sqrt(d) * (1 if dtype == jnp.float32 else 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=1e-5)
+
+
+@pytest.mark.parametrize("d,ell,n", [(32, 4, 8), (64, 16, 64), (123, 17, 50),
+                                     (1024, 256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_sweep(d, ell, n, dtype):
+    u = jnp.asarray(np.linalg.qr(RNG.normal(size=(d, d)))[0][:, :ell], dtype)
+    g = jnp.asarray(RNG.normal(size=(d, n)), dtype)
+    coeffs = jnp.asarray(RNG.random(ell), jnp.float32)
+    got = lowrank_apply_pallas(u, coeffs, 0.31, g, bn=64)
+    want = lowrank_apply_ref(u.astype(jnp.float32), coeffs, 0.31,
+                             g.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 0.08
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd,causal", [
+    (1, 2, 2, 64, 16, True),
+    (2, 4, 2, 96, 32, True),     # GQA + ragged tiles
+    (1, 8, 1, 128, 64, True),    # MQA
+    (2, 2, 2, 80, 16, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(B, Hq, Hkv, S, hd, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=32, bk=32)
+    want = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk,ht", [
+    (1, 32, 4, 16, 16, 8, 4),
+    (2, 64, 8, 16, 32, 16, 4),
+    (1, 48, 6, 32, 64, 16, 2),   # ragged chunk/head tiling
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(B, S, H, P, N, chunk, ht, dtype):
+    from repro.kernels.ssd.kernel import ssd_pallas
+    from repro.kernels.ssd.ref import ssd_ref
+    u = jnp.asarray(RNG.normal(size=(B, S, H, P)) * 0.5, dtype)
+    dlog = jnp.asarray(-np.abs(RNG.normal(size=(B, S, H))) * 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)) * 0.3, dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)) * 0.3, dtype)
+    got = ssd_pallas(u, dlog, Bm, Cm, chunk=chunk, head_tile=ht)
+    want = ssd_ref(u, dlog, Bm, Cm, chunk=chunk)
+    tol = 5e-6 * S if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)

@@ -1,0 +1,113 @@
+"""Convex OCO behaviour (paper Appendix A + the Observation 2 mechanism)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sadagrad as oco
+from repro.core.fd import fd_init, fd_update
+
+
+def _run(name, gs, losses_of, lr, d, ell=6, delta=1e-3):
+    init, step, needs = oco.LEARNERS[name]
+    state = init(d, ell) if needs["ell"] else init(d)
+    x = jnp.zeros((d,))
+    total = 0.0
+    for g_fn, loss_fn in zip(gs, losses_of):
+        total += float(loss_fn(x))
+        g = g_fn(x)
+        if needs["delta"]:
+            x, state = step(state, x, g, lr, delta)
+        else:
+            x, state = step(state, x, g, lr)
+    return total if np.isfinite(total) else np.inf
+
+
+def _logistic_stream(seed, d, T, rank=None):
+    """Synthetic binary logistic regression stream."""
+    rng = np.random.default_rng(seed)
+    if rank:
+        basis = np.linalg.qr(rng.normal(size=(d, rank)))[0]
+        feats = rng.normal(size=(T, rank)) @ basis.T
+    else:
+        feats = rng.normal(size=(T, d)) * np.exp(-np.arange(d) / 8.0)
+    w_star = rng.normal(size=d)
+    labels = np.sign(feats @ w_star + 0.1 * rng.normal(size=T))
+    gs, ls = [], []
+    for a, y in zip(feats, labels):
+        a_j = jnp.asarray(a * y, jnp.float32)
+
+        def loss(x, a_j=a_j):
+            return jnp.log1p(jnp.exp(-a_j @ x))
+
+        gs.append(jax.grad(loss))
+        ls.append(loss)
+    return gs, ls
+
+
+def test_sadagrad_competitive_on_decaying_spectrum():
+    """Paper Tbl. 3: S-AdaGrad places with the top full-information
+    baselines despite O(d*ell) covariance memory."""
+    d, T = 30, 300
+    gs, ls = _logistic_stream(0, d, T)
+    lrs = (0.02, 0.05, 0.2, 0.5, 1.0)
+    best = {}
+    for name in ("s-adagrad", "adagrad", "ogd"):
+        best[name] = min(_run(name, gs, ls, lr, d) for lr in lrs)
+    assert best["s-adagrad"] <= 1.15 * min(best.values())
+
+
+def test_obs2_escaped_mass_mechanism():
+    """Obs. 2 mechanism: on iid draws from r > ell orthonormal vectors the FD
+    escaped mass grows LINEARLY in T (what makes Ada-FD's fixed-delta bound
+    Omega(T^{3/4})), while on a fast-decaying stream it grows sublinearly."""
+    d, r, ell = 24, 12, 6
+    rng = np.random.default_rng(3)
+    W = np.linalg.qr(rng.normal(size=(d, r)))[0].T
+
+    def rho_at(T, stream):
+        st = fd_init(d, ell)
+        for g in stream(T):
+            st = fd_update(st, jnp.asarray(g, jnp.float32))
+        return float(st.rho)
+
+    def orth_stream(T):
+        return [W[i] for i in rng.integers(0, r, size=T)]
+
+    def decay_stream(T):
+        scales = np.exp(-np.arange(d) / 2.0)
+        return [scales * rng.normal(size=d) for _ in range(T)]
+
+    r1, r2 = rho_at(150, orth_stream), rho_at(300, orth_stream)
+    # linear growth: doubling T roughly doubles rho
+    assert r2 >= 1.6 * r1
+    d1, d2 = rho_at(150, decay_stream), rho_at(300, decay_stream)
+    # decaying spectrum: clearly sublinear vs the orthonormal stream
+    assert (d2 / max(d1, 1e-9)) < (r2 / r1)
+
+
+def test_sadagrad_consistently_top3():
+    """Paper Tbl. 3's actual claim: S-AdaGrad is the only method that
+    consistently places in the top 3 across datasets."""
+    lrs = (0.02, 0.05, 0.2, 0.5)
+    deltas = (1e-4, 1e-2, 1.0)
+    for seed, rank in ((0, None), (5, 12)):
+        d, T = 24, 250
+        gs, ls = _logistic_stream(seed, d, T, rank=rank)
+        results = {}
+        for name in ("s-adagrad", "adagrad", "ogd", "ada-fd", "fd-son",
+                     "rfd-son"):
+            needs = oco.LEARNERS[name][2]
+            results[name] = min(
+                _run(name, gs, ls, lr, d, ell=10, delta=delta)  # paper: l=10
+                for lr in lrs
+                for delta in (deltas if needs["delta"] else (1e-3,)))
+        order = sorted(results, key=results.get)
+        assert order.index("s-adagrad") < 3, (order, results)
+
+
+def test_all_learners_run():
+    d, T = 16, 50
+    gs, ls = _logistic_stream(1, d, T)
+    for name in oco.LEARNERS:
+        total = _run(name, gs, ls, 0.01, d, ell=4, delta=0.1)
+        assert np.isfinite(total), name
