@@ -27,12 +27,13 @@ def _row(name, us, derived):
 
 def bench_fig1_memory() -> None:
     """Paper Fig. 1: asymptotic optimizer memory, measured exactly on a
-    BERT-large-like parameter set (4096x1024 FFN + 1024x1024 attn)."""
-    from repro.core.adam import AdamConfig, adam, second_moment_bytes as ab
-    from repro.core.shampoo import (ShampooConfig, shampoo,
-                                    second_moment_bytes as sb)
-    from repro.core.sketchy import (SketchyConfig, sketchy,
-                                    second_moment_bytes as kb)
+    BERT-large-like parameter set (4096x1024 FFN + 1024x1024 attn).  One
+    metadata-driven accounting (api.second_moment_bytes over shape structs)
+    covers every optimizer expressed through the shared engine."""
+    from repro.core import api
+    from repro.core.adam import AdamConfig, adam
+    from repro.core.shampoo import ShampooConfig, shampoo
+    from repro.core.sketchy import SketchyConfig, sketchy
 
     params = {
         "ffn_in": jnp.zeros((1024, 4096), jnp.float32),
@@ -41,14 +42,14 @@ def bench_fig1_memory() -> None:
         "attn_o": jnp.zeros((1024, 1024), jnp.float32),
     }
     t0 = time.perf_counter()
-    rows = [
-        ("adam", ab(adam(AdamConfig()).init(params))),
-        ("shampoo", sb(shampoo(ShampooConfig(block_size=1024)).init(params))),
-        ("sketchy_l256", kb(sketchy(SketchyConfig(rank=256,
-                                                  block_size=1024)).init(params))),
-        ("sketchy_l64", kb(sketchy(SketchyConfig(rank=64,
-                                                 block_size=1024)).init(params))),
+    txs = [
+        ("adam", adam(AdamConfig())),
+        ("shampoo", shampoo(ShampooConfig(block_size=1024))),
+        ("sketchy_l256", sketchy(SketchyConfig(rank=256, block_size=1024))),
+        ("sketchy_l64", sketchy(SketchyConfig(rank=64, block_size=1024))),
     ]
+    rows = [(name, api.second_moment_bytes(jax.eval_shape(tx.init, params)))
+            for name, tx in txs]
     us = (time.perf_counter() - t0) * 1e6 / len(rows)
     base = dict(rows)["shampoo"]
     for name, b in rows:

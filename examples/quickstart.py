@@ -1,35 +1,66 @@
-"""Quickstart: Sketchy (S-Shampoo) as a drop-in optimizer on a tiny LM.
+"""Quickstart: Sketchy (S-Shampoo) through the unified Preconditioner API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+What this demonstrates:
+  * ``make_optimizer`` builds a labelled ``named_chain`` (clip -> precond ->
+    momentum -> lr) wrapped in ``inject_hyperparams`` — the learning rate
+    lives in optimizer state.
+  * Every state leaf carries a ``StateMeta`` annotation; memory accounting
+    and introspection are one metadata traversal, no optimizer-specific
+    types anywhere.
+  * Hyperparameters can be mutated mid-run (``api.set_hyperparams``) without
+    rebuilding or re-jitting the chain — the serve/elastic re-mesh path.
 """
+import collections
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_reduced
+from repro.core import api
 from repro.core.factory import OptimizerConfig, make_optimizer
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import model as model_lib
 from repro.train.trainer import make_train_step
 
 
+def state_summary(opt_state) -> str:
+    """Bytes per StateMeta role — works for any optimizer on the engine."""
+    by_role = collections.Counter()
+    for meta, leaf in api.leaves_with_meta(opt_state):
+        role = meta.role if meta is not None else "untagged"
+        by_role[role] += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return "  ".join(f"{r}={b/1e3:.1f}kB" for r, b in sorted(by_role.items()))
+
+
 def main():
     cfg = get_reduced("paper_lm_100m")
-    print(f"model: {cfg.name} (reduced) — "
-          f"{sum(x.size for x in jax.tree.leaves(model_lib.init_params(cfg, jax.random.PRNGKey(0)))) / 1e6:.2f}M params")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} (reduced) — {n_params / 1e6:.2f}M params")
 
     # The paper's optimizer: FD-sketched Shampoo, rank 256 (rank 8 here for
     # the tiny demo). Second-moment memory is O((m+n)*rank) per block.
+    # schedule="constant" keeps the lr a stored state value => mutable below.
     tx = make_optimizer(OptimizerConfig(
         name="sketchy", learning_rate=5e-3, rank=8, block_size=32,
         update_every=2, total_steps=50, schedule="constant"))
 
-    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
     opt_state = tx.init(params)
+    print("optimizer state by role:", state_summary(opt_state))
+    print(f"second-moment bytes (paper Fig. 1 quantity): "
+          f"{api.second_moment_bytes(opt_state)}")
+
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))
     step = jax.jit(make_train_step(cfg, tx))
 
     for t in range(50):
+        if t == 30:  # runtime schedule change: decay lr 5x, no chain rebuild
+            opt_state = api.set_hyperparams(opt_state, learning_rate=1e-3)
+            print(f"step {t:3d}  lr ->",
+                  float(api.get_hyperparams(opt_state)["learning_rate"]))
         batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
         params, opt_state, m = step(params, opt_state, batch)
         if t % 10 == 0 or t == 49:

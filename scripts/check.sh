@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Smoke target: tier-1 tests + the fast memory/FD benchmarks.
+#   scripts/check.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -x -q "$@"
+
+echo "--- fast benchmarks (fig1 memory + lemma-1 FD error) ---"
+PYTHONPATH=src python - <<'PY'
+import sys
+sys.path.insert(0, "benchmarks")
+import run
+print("name,us_per_call,derived")
+run.bench_fig1_memory()
+run.bench_lem1_fd_error()
+PY

@@ -1,7 +1,18 @@
-"""Core: the paper's contribution — FD sketching + Sketchy optimizers."""
+"""Core: the paper's contribution — FD sketching + Sketchy optimizers.
+
+The optimizer layer is built around the unified Preconditioner API
+(core/api.py): one shared ``scale_by_preconditioner`` engine plus small
+per-variant ``Preconditioner`` implementations, with ``StateMeta`` metadata
+attached to every optimizer-state leaf.
+"""
 from repro.core.fd import FDState, fd_init, fd_update, fd_covariance, \
     fd_apply_inverse_root, fd_inverse_root_coeffs  # noqa: F401
-from repro.core.sketchy import SketchyConfig  # noqa: F401
-from repro.core.shampoo import ShampooConfig  # noqa: F401
-from repro.core.adam import AdamConfig  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    EngineConfig, InjectState, Preconditioner, PrecondState, StateMeta,
+    Tagged, get_hyperparams, get_stage, inject_hyperparams, leaves_with_meta,
+    map_with_meta, named_chain, scale_by_preconditioner, second_moment_bytes,
+    set_hyperparams, tag, tag_like, untag)
+from repro.core.sketchy import SketchyConfig, SketchyPreconditioner  # noqa: F401
+from repro.core.shampoo import ShampooConfig, ShampooPreconditioner  # noqa: F401
+from repro.core.adam import AdamConfig, AdamPreconditioner  # noqa: F401
 from repro.core.factory import OptimizerConfig, make_optimizer  # noqa: F401

@@ -1,13 +1,16 @@
 """Adam baseline (paper's first-order comparison) — linear-memory diag
-second moment."""
+second moment, expressed as a *diagonal* ``Preconditioner`` on the shared
+engine (``diagonal=True``: each leaf is handled whole; blocking, grafting,
+and cadence gating do not apply)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any, ClassVar, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import api, blocking
 from repro.core.transform import GradientTransformation
 
 
@@ -19,35 +22,46 @@ class AdamConfig:
     state_dtype: Any = jnp.float32
 
 
-class AdamState(NamedTuple):
-    count: jnp.ndarray
-    mu: Any
-    nu: Any
+class AdamLeafStats(NamedTuple):
+    mu: jnp.ndarray     # first moment (bias-corrected at apply time)
+    nu: jnp.ndarray     # diag second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamPreconditioner:
+    cfg: AdamConfig
+
+    diagonal: ClassVar[bool] = True
+
+    def init_block(self, info: blocking.BlockInfo) -> AdamLeafStats:
+        zeros = jnp.zeros(info.shape, self.cfg.state_dtype)
+        return AdamLeafStats(mu=api.tag(zeros, "momentum"),
+                             nu=api.tag(zeros, "second_moment"))
+
+    def update_stats(self, state, G, *, count):
+        c = self.cfg
+        return AdamLeafStats(
+            mu=c.beta1 * state.mu + (1 - c.beta1) * G.astype(state.mu.dtype),
+            nu=c.beta2 * state.nu
+            + (1 - c.beta2) * jnp.square(G.astype(state.nu.dtype)))
+
+    def refresh(self, state, G, *, count):
+        return state
+
+    def precondition(self, state, G, *, count):
+        c = self.cfg
+        t = (count + 1).astype(jnp.float32)
+        bc1 = 1 - c.beta1 ** t
+        bc2 = 1 - c.beta2 ** t
+        return (state.mu / bc1) * jax.lax.rsqrt(state.nu / bc2 + c.eps ** 2)
 
 
 def adam(cfg: AdamConfig = AdamConfig()) -> GradientTransformation:
-    def init_fn(params):
-        zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
-        return AdamState(count=jnp.zeros([], jnp.int32),
-                         mu=jax.tree.map(zeros, params),
-                         nu=jax.tree.map(zeros, params))
-
-    def update_fn(updates, state, params=None):
-        del params
-        count = state.count + 1
-        mu = jax.tree.map(lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g.astype(m.dtype),
-                          state.mu, updates)
-        nu = jax.tree.map(lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g.astype(v.dtype)),
-                          state.nu, updates)
-        bc1 = 1 - cfg.beta1 ** count.astype(jnp.float32)
-        bc2 = 1 - cfg.beta2 ** count.astype(jnp.float32)
-        out = jax.tree.map(
-            lambda m, v, g: ((m / bc1) * jax.lax.rsqrt(v / bc2 + cfg.eps ** 2)).astype(g.dtype),
-            mu, nu, updates)
-        return out, AdamState(count=count, mu=mu, nu=nu)
-
-    return GradientTransformation(init_fn, update_fn)
+    return api.scale_by_preconditioner(
+        AdamPreconditioner(cfg),
+        api.EngineConfig(graft="none", update_every=1,
+                         state_dtype=cfg.state_dtype))
 
 
-def second_moment_bytes(state: AdamState) -> int:
-    return sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(state.nu))
+def second_moment_bytes(state) -> int:
+    return api.second_moment_bytes(state)

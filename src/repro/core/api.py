@@ -1,0 +1,458 @@
+"""Unified Preconditioner API: one engine, metadata-driven state.
+
+The paper frames Sketchy, Shampoo, and Adam as points on a single
+memory/quality trade-off curve over the same Kronecker-factored second-moment
+statistics.  This module makes that framing first-class:
+
+  * ``Preconditioner`` — the protocol an optimizer variant implements.  It is
+    deliberately tiny: per matrix *block*, how to initialize statistics, how
+    to accumulate them every step, how to refresh the (expensive) derived
+    preconditioner on a cadence, and how to apply it to a gradient block.
+
+  * ``scale_by_preconditioner(precond, cfg)`` — the one shared engine.  It
+    owns everything the per-optimizer monoliths used to duplicate: parameter
+    blocking (paper §3.4), the diagonal fallback for vectors/scalars,
+    grafting (App. C), ``update_every`` / ``start_preconditioning_step``
+    gating, and the per-leaf loop.
+
+  * ``StateMeta`` / ``Tagged`` — every engine state leaf is wrapped in a
+    ``Tagged`` pytree node carrying a static ``StateMeta`` (role, blocked
+    layout, owning-parameter index).  Downstream consumers — sharding
+    assignment, checkpoint manifests, memory accounting — traverse this
+    metadata instead of ``isinstance``-dispatching on optimizer-specific
+    NamedTuples, so a new optimizer variant needs zero consumer changes.
+
+  * ``named_chain`` / ``inject_hyperparams`` — labelled composition and
+    hyperparameters-in-state, so serving/elastic re-mesh code can read or
+    mutate e.g. the learning rate at runtime without rebuilding the chain.
+
+``Tagged`` wraps exactly one array leaf.  It is transparent to single-tree
+``jax.tree.map`` (the map recurses into it and reconstructs it, preserving
+the metadata), to ``jax.vmap``/``jax.lax.cond`` (metadata is static aux
+data), and to flattening (it contributes exactly one leaf, so flat orders
+match the untagged tree).  When an implementation needs typed containers of
+raw arrays (e.g. ``FDState``), the engine strips tags with ``untag`` before
+compute and restores them with ``tag_like`` after.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+from repro.core.transform import GradientTransformation
+
+PyTree = Any
+
+# Roles a state leaf can play.  second_moment is the paper's headline memory
+# quantity (Fig. 1); preconditioner covers derived caches (e.g. Shampoo's
+# inverse roots) that are excluded from it.
+ROLES = ("second_moment", "preconditioner", "grafting", "momentum", "count",
+         "hyperparam")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateMeta:
+    """Static annotation attached to one optimizer-state array leaf."""
+    role: str
+    blocked: bool = False          # leading axis is the stacked-blocks dim
+    param_index: Optional[int] = None  # flat index of the owning parameter
+    shard: str = "auto"            # auto | blocks | param | replicate
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(f"unknown state role {self.role!r}")
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class Tagged:
+    """Pytree node wrapping a single array leaf plus its static StateMeta."""
+    __slots__ = ("value", "meta")
+
+    def __init__(self, value, meta: StateMeta):
+        self.value = value
+        self.meta = meta
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("value"), self.value),), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        return cls(children[0], meta)
+
+    def __repr__(self):
+        return f"Tagged({self.value!r}, {self.meta})"
+
+
+def tag(value, role: str, **kw) -> Tagged:
+    return Tagged(value, StateMeta(role=role, **kw))
+
+
+def _is_tagged(x) -> bool:
+    return isinstance(x, Tagged)
+
+
+def untag(tree: PyTree) -> PyTree:
+    """Strip Tagged wrappers, leaving a plain array pytree."""
+    return jax.tree.map(lambda x: x.value if _is_tagged(x) else x, tree,
+                        is_leaf=_is_tagged)
+
+
+def tag_like(template: PyTree, values: PyTree) -> PyTree:
+    """Re-attach ``template``'s tags onto a congruent untagged tree."""
+    return jax.tree.map(
+        lambda t, v: Tagged(v, t.meta) if _is_tagged(t) else v,
+        template, values, is_leaf=_is_tagged)
+
+
+def leaves_with_meta(tree: PyTree) -> list:
+    """Flat ``[(StateMeta | None, leaf), ...]`` in ``jax.tree.leaves`` order.
+
+    Tagged nodes contribute their meta; plain leaves get ``None``.  Because a
+    Tagged node holds exactly one leaf, the ordering is identical to a full
+    flatten of the same tree.
+    """
+    out = []
+    for x in jax.tree.leaves(tree, is_leaf=_is_tagged):
+        if _is_tagged(x):
+            out.append((x.meta, x.value))
+        else:
+            out.append((None, x))
+    return out
+
+
+def map_with_meta(fn: Callable[[Optional[StateMeta], Any], Any],
+                  tree: PyTree) -> PyTree:
+    """Map ``fn(meta_or_None, leaf) -> leaf`` over a tree, keeping tags."""
+    def one(x):
+        if _is_tagged(x):
+            return Tagged(fn(x.meta, x.value), x.meta)
+        return fn(None, x)
+    return jax.tree.map(one, tree, is_leaf=_is_tagged)
+
+
+def second_moment_bytes(state: PyTree) -> int:
+    """Second-moment memory by metadata traversal — the paper's Fig. 1
+    quantity (excludes grafting/momentum/derived preconditioners).  Works on
+    any state pytree: a bare engine state, a named chain, a full injected
+    optimizer state, or shape structs from ``jax.eval_shape``."""
+    total = 0
+    for meta, leaf in leaves_with_meta(state):
+        if meta is not None and meta.role == "second_moment":
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner protocol
+
+
+@runtime_checkable
+class Preconditioner(Protocol):
+    """One optimizer variant = one small implementation of this protocol.
+
+    ``diagonal = False`` (kron-style: sketchy, shampoo, sadagrad): the engine
+    blocks each matrix leaf into a ``(S, bm, bn)`` stack and vmaps the three
+    methods over blocks; vector/scalar leaves take the engine's shared
+    diagonal (RMSProp) fallback.
+
+    ``diagonal = True`` (adam): every leaf is handled whole by the
+    implementation's own elementwise logic; blocking, grafting, and gating
+    are skipped.
+
+    Engine call order per step (mirrors the seed monoliths exactly):
+      state = update_stats(state, G)        # every step (cheap accumulation)
+      state = refresh(state, G)             # every cfg.update_every steps
+      P     = precondition(state, G)        # every step (apply)
+    """
+    diagonal: bool
+
+    def init_block(self, info: blocking.BlockInfo) -> PyTree:
+        """State for ONE block (Tagged leaves). The engine broadcasts it over
+        the leaf's block stack."""
+        ...
+
+    def update_stats(self, state: PyTree, G: jnp.ndarray, *,
+                     count: jnp.ndarray) -> PyTree:
+        ...
+
+    def refresh(self, state: PyTree, G: jnp.ndarray, *,
+                count: jnp.ndarray) -> PyTree:
+        ...
+
+    def precondition(self, state: PyTree, G: jnp.ndarray, *,
+                     count: jnp.ndarray) -> jnp.ndarray:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything the shared engine owns (formerly duplicated per optimizer)."""
+    block_size: int = 1024
+    beta2: float = 0.999            # diag-fallback / grafting EMA decay
+    update_every: int = 10          # refresh cadence (paper §6)
+    start_preconditioning_step: int = 0
+    graft: str = "rmsprop_normalized"   # rmsprop_normalized | rmsprop | none
+    graft_eps: float = 1e-8
+    state_dtype: Any = jnp.float32
+    # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
+    # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
+    # of the diagonal fallback.
+    treat_vectors_as_columns: bool = False
+
+
+class LeafState(NamedTuple):
+    stats: Any          # implementation-defined, Tagged leaves
+    graft: Any          # Tagged grafting accumulator, or None
+
+
+class PrecondState(NamedTuple):
+    count: Tagged
+    leaves: tuple
+
+
+def graft_direction(g: jnp.ndarray, acc: jnp.ndarray, *, graft: str,
+                    beta2, graft_eps: float):
+    """Grafting direction + updated accumulator (paper App. C,
+    RMSPROP_NORMALIZED). ``g``/``acc`` are float32."""
+    if graft == "none":
+        return g, acc
+    if graft == "rmsprop_normalized":
+        gn = g / (jnp.linalg.norm(g) + 1e-16)
+    else:
+        gn = g
+    acc = beta2 * acc + (1.0 - beta2) * jnp.square(gn)
+    return gn * jax.lax.rsqrt(acc + graft_eps), acc
+
+
+def _index_unblocked(tree: PyTree, i: int) -> PyTree:
+    """Record the owning-param index on param-shaped (non-blocked) tags."""
+    def one(x):
+        if _is_tagged(x) and not x.meta.blocked and x.meta.param_index is None:
+            return Tagged(x.value, dataclasses.replace(x.meta, param_index=i))
+        return x
+    return jax.tree.map(one, tree, is_leaf=_is_tagged)
+
+
+def scale_by_preconditioner(precond: Preconditioner,
+                            cfg: EngineConfig = EngineConfig()
+                            ) -> GradientTransformation:
+    """The ONE shared direction engine (emits a descent direction, no lr)."""
+
+    def leaf_info(shape) -> blocking.BlockInfo:
+        if (cfg.treat_vectors_as_columns and len(shape) == 1
+                and shape[0] >= 1):
+            mb, bs_m = blocking._tile(shape[0], cfg.block_size)
+            return blocking.BlockInfo(kind="matrix", shape=tuple(shape),
+                                      stack=1, m=shape[0], n=1, bs_m=bs_m,
+                                      bs_n=1, mb=mb, nb=1)
+        return blocking.analyze(tuple(shape), cfg.block_size)
+
+    def init_leaf(p, i: int) -> LeafState:
+        info = leaf_info(p.shape)
+        if precond.diagonal:
+            stats = _index_unblocked(precond.init_block(
+                blocking.BlockInfo(kind="diag", shape=tuple(p.shape))), i)
+            return LeafState(stats=stats, graft=None)
+        if info.kind == "diag":
+            stats = tag(jnp.zeros(p.shape, cfg.state_dtype), "second_moment",
+                        param_index=i)
+            return LeafState(stats=stats, graft=None)
+        base = precond.init_block(info)
+        S = info.num_blocks
+        stats = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (S,) + x.shape), base)
+        graft = None
+        if cfg.graft != "none":
+            graft = tag(jnp.zeros(p.shape, cfg.state_dtype), "grafting",
+                        param_index=i)
+        return LeafState(stats=stats, graft=graft)
+
+    def init_fn(params):
+        leaves = tuple(init_leaf(p, i)
+                       for i, p in enumerate(jax.tree.leaves(params)))
+        return PrecondState(count=tag(jnp.zeros([], jnp.int32), "count"),
+                            leaves=leaves)
+
+    def update_leaf(g, leaf: LeafState, count):
+        g32 = g.astype(jnp.float32)
+        info = leaf_info(g.shape)
+
+        if precond.diagonal:
+            raw = untag(leaf.stats)
+            raw = precond.update_stats(raw, g32, count=count)
+            direction = precond.precondition(raw, g32, count=count)
+            return (direction.astype(g.dtype),
+                    LeafState(stats=tag_like(leaf.stats, raw), graft=None))
+
+        if info.kind == "diag":
+            acc = cfg.beta2 * leaf.stats.value \
+                + (1.0 - cfg.beta2) * jnp.square(g32)
+            direction = g32 * jax.lax.rsqrt(acc + cfg.graft_eps)
+            return (direction.astype(g.dtype),
+                    LeafState(stats=Tagged(acc, leaf.stats.meta), graft=None))
+
+        gb = blocking.to_blocks(g32, info)
+        raw = untag(leaf.stats)
+        raw = jax.vmap(
+            lambda s, G: precond.update_stats(s, G, count=count))(raw, gb)
+
+        def do_refresh(s):
+            return jax.vmap(
+                lambda ss, G: precond.refresh(ss, G, count=count))(s, gb)
+
+        if cfg.update_every <= 1:
+            raw = do_refresh(raw)
+        else:
+            raw = jax.lax.cond((count % cfg.update_every) == 0,
+                               do_refresh, lambda s: s, raw)
+
+        pb = jax.vmap(
+            lambda s, G: precond.precondition(s, G, count=count))(raw, gb)
+        direction = blocking.from_blocks(pb, info)
+
+        if cfg.graft != "none":
+            graft_dir, new_acc = graft_direction(
+                g32, leaf.graft.value, graft=cfg.graft, beta2=cfg.beta2,
+                graft_eps=cfg.graft_eps)
+            pnorm = jnp.linalg.norm(direction)
+            gnorm = jnp.linalg.norm(graft_dir)
+            direction = direction * (gnorm / (pnorm + 1e-16))
+            new_graft = Tagged(new_acc, leaf.graft.meta)
+        else:
+            graft_dir = g32
+            new_graft = None
+
+        if cfg.start_preconditioning_step > 0:
+            use_precond = count >= cfg.start_preconditioning_step
+            direction = jnp.where(use_precond, direction, graft_dir)
+        return (direction.astype(g.dtype),
+                LeafState(stats=tag_like(leaf.stats, raw), graft=new_graft))
+
+    def update_fn(updates, state, params=None):
+        del params
+        flat, treedef = jax.tree.flatten(updates)
+        count = state.count.value
+        out, new_leaves = [], []
+        for g, leaf in zip(flat, state.leaves):
+            d, nl = update_leaf(g, leaf, count)
+            out.append(d)
+            new_leaves.append(nl)
+        return (jax.tree.unflatten(treedef, out),
+                PrecondState(count=Tagged(count + 1, state.count.meta),
+                             leaves=tuple(new_leaves)))
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# Labelled composition + hyperparameters-in-state
+
+
+def named_chain(*stages) -> GradientTransformation:
+    """``chain`` with labelled stages: state is ``{name: member_state}``.
+
+    Stage names become checkpoint-manifest path components and are the lookup
+    key for ``get_stage`` — no positional index guessing.
+    """
+    names = [n for n, _ in stages]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate stage names: {names}")
+
+    def init_fn(params):
+        return {name: t.init(params) for name, t in stages}
+
+    def update_fn(updates, state, params=None):
+        new_state = {}
+        for name, t in stages:
+            updates, new_state[name] = t.update(updates, state[name], params)
+        return updates, new_state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class InjectState(NamedTuple):
+    count: Tagged
+    hyperparams: dict    # name -> Tagged scalar (role 'hyperparam')
+    inner: Any
+
+
+def inject_hyperparams(inner_factory: Callable[..., GradientTransformation]):
+    """optax-style wrapper: numeric hyperparameters live in optimizer state.
+
+    ``inner_factory(**hypers)`` must build a GradientTransformation whose
+    *state structure* does not depend on the hyperparameter values.  Each
+    declared hyper is either a number (stored in state, mutable at runtime
+    via ``set_hyperparams`` — no chain rebuild) or a callable schedule
+    ``count -> value`` (re-evaluated every step from the injected count; the
+    current value is still mirrored into state for observability).
+    """
+    def make(**hypers):
+        def resolve(count, current: dict) -> dict:
+            out = {}
+            for k, v in hypers.items():
+                if callable(v):
+                    out[k] = jnp.asarray(v(count), jnp.float32)
+                else:
+                    out[k] = current[k]
+            return out
+
+        def init_fn(params):
+            count0 = jnp.zeros([], jnp.int32)
+            vals = {k: jnp.asarray(v(count0) if callable(v) else v,
+                                   jnp.float32)
+                    for k, v in hypers.items()}
+            inner = inner_factory(**vals).init(params)
+            return InjectState(
+                count=tag(count0, "count"),
+                hyperparams={k: tag(v, "hyperparam")
+                             for k, v in vals.items()},
+                inner=inner)
+
+        def update_fn(updates, state, params=None):
+            count = state.count.value
+            current = {k: t.value for k, t in state.hyperparams.items()}
+            vals = resolve(count, current)
+            tx = inner_factory(**vals)
+            updates, inner = tx.update(updates, state.inner, params)
+            return updates, InjectState(
+                count=Tagged(count + 1, state.count.meta),
+                hyperparams={k: Tagged(v, state.hyperparams[k].meta)
+                             for k, v in vals.items()},
+                inner=inner)
+
+        return GradientTransformation(init_fn, update_fn)
+
+    return make
+
+
+def set_hyperparams(state: InjectState, **overrides) -> InjectState:
+    """Mutate stored hyperparameter values at runtime (serve/elastic) without
+    rebuilding the chain.  Schedule-driven hypers are recomputed from the
+    step count each update; overriding those here only affects the mirrored
+    value until the next step."""
+    hp = dict(state.hyperparams)
+    for k, v in overrides.items():
+        if k not in hp:
+            raise KeyError(f"unknown hyperparameter {k!r}; have {list(hp)}")
+        t = hp[k]
+        hp[k] = Tagged(jnp.asarray(v, t.value.dtype), t.meta)
+    return state._replace(hyperparams=hp)
+
+
+def get_hyperparams(state: InjectState) -> dict:
+    return {k: t.value for k, t in state.hyperparams.items()}
+
+
+def get_stage(state, name: str):
+    """Fetch a named stage's state from a (possibly injected) chain state."""
+    if isinstance(state, InjectState):
+        return get_stage(state.inner, name)
+    if isinstance(state, dict):
+        if name not in state:
+            raise KeyError(f"no stage {name!r}; have {sorted(state)}")
+        return state[name]
+    raise TypeError(f"not a named-chain state: {type(state)}")

@@ -1,17 +1,20 @@
 """Optimizer factory: name -> full training transformation chain.
 
-Chain layout (paper App. C conventions):
-  clip_by_global_norm -> direction (sketchy | shampoo | adam)
-  -> EMA momentum ("moving_average_for_momentum") -> decoupled weight decay
-  -> -lr(t) schedule
+Chain layout (paper App. C conventions), as a labelled ``named_chain``:
+  clip -> precond (sketchy | shampoo | adam direction)
+  -> momentum (EMA "moving_average_for_momentum") -> weight_decay
+  -> lr (negated schedule)
+
+The whole chain is wrapped in ``inject_hyperparams`` so ``learning_rate`` and
+``beta2`` live in optimizer state: serve/elastic code can read or mutate them
+at runtime (``api.set_hyperparams``) without rebuilding the chain.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax.numpy as jnp
-
+from repro.core import api
 from repro.core import adam as adam_lib
 from repro.core import shampoo as shampoo_lib
 from repro.core import sketchy as sketchy_lib
@@ -37,52 +40,54 @@ class OptimizerConfig:
     use_kernels: bool = False
 
 
-def make_optimizer(cfg: OptimizerConfig) -> transform.GradientTransformation:
+def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
     if cfg.name == "sketchy":
-        direction = sketchy_lib.sketchy(sketchy_lib.SketchyConfig(
-            rank=cfg.rank, block_size=cfg.block_size, beta2=cfg.beta2,
+        return sketchy_lib.sketchy(sketchy_lib.SketchyConfig(
+            rank=cfg.rank, block_size=cfg.block_size, beta2=beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             use_kernels=cfg.use_kernels))
-    elif cfg.name == "shampoo":
-        direction = shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
-            block_size=cfg.block_size, beta2=cfg.beta2,
+    if cfg.name == "shampoo":
+        return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
+            block_size=cfg.block_size, beta2=beta2,
             root_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step))
-    elif cfg.name == "adam":
-        direction = adam_lib.adam(adam_lib.AdamConfig(
-            beta1=cfg.beta1, beta2=cfg.beta2))
-    else:
-        raise ValueError(f"unknown optimizer {cfg.name!r}")
+    if cfg.name == "adam":
+        return adam_lib.adam(adam_lib.AdamConfig(
+            beta1=cfg.beta1, beta2=beta2))
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def make_optimizer(cfg: OptimizerConfig) -> transform.GradientTransformation:
+    def build(learning_rate, beta2):
+        stages = []
+        if cfg.grad_clip:
+            stages.append(("clip", transform.clip_by_global_norm(cfg.grad_clip)))
+        stages.append(("precond", _direction(cfg, beta2)))
+        if cfg.name != "adam":  # adam has built-in beta1 momentum
+            stages.append(("momentum", transform.momentum(cfg.beta1, ema=True)))
+        if cfg.weight_decay:
+            stages.append(("weight_decay",
+                           transform.add_decayed_weights(cfg.weight_decay)))
+        stages.append(("lr", transform.scale(-1.0 * learning_rate)))
+        return api.named_chain(*stages)
 
     if cfg.schedule == "warmup_cosine":
-        sched = schedules.warmup_cosine(cfg.learning_rate, cfg.total_steps,
-                                        cfg.warmup_frac)
+        lr_hyper = schedules.warmup_cosine(cfg.learning_rate, cfg.total_steps,
+                                           cfg.warmup_frac)
     else:
-        sched = schedules.constant(cfg.learning_rate)
-    neg = lambda c: -sched(c)
-
-    parts = []
-    if cfg.grad_clip:
-        parts.append(transform.clip_by_global_norm(cfg.grad_clip))
-    parts.append(direction)
-    if cfg.name != "adam":  # adam has built-in beta1 momentum
-        parts.append(transform.momentum(cfg.beta1, ema=True))
-    if cfg.weight_decay:
-        parts.append(transform.add_decayed_weights(cfg.weight_decay))
-    parts.append(transform.scale_by_schedule(neg))
-    return transform.chain(*parts)
+        # constant lr is stored as a plain value => runtime-mutable via
+        # api.set_hyperparams (serve-time schedule changes, elastic re-mesh)
+        lr_hyper = cfg.learning_rate
+    return api.inject_hyperparams(build)(learning_rate=lr_hyper,
+                                         beta2=cfg.beta2)
 
 
-def second_moment_bytes(name: str, state) -> int:
-    """Second-moment memory of the *direction* stage inside the chain."""
-    idx = 1 if len(state) >= 2 and isinstance(state[0], tuple) and not state[0] else None
-    # chain state: tuple of member states; find the direction stage by type.
-    for s in state:
-        if isinstance(s, sketchy_lib.SketchyState):
-            return sketchy_lib.second_moment_bytes(s)
-        if isinstance(s, shampoo_lib.ShampooState):
-            return shampoo_lib.second_moment_bytes(s)
-        if isinstance(s, adam_lib.AdamState):
-            return adam_lib.second_moment_bytes(s)
-    raise ValueError("no direction stage found in state")
+def second_moment_bytes(state) -> int:
+    """Second-moment memory of the direction stage, found by StateMeta
+    traversal — works on any chain nesting, no type dispatch."""
+    total = api.second_moment_bytes(state)
+    if total == 0:
+        raise ValueError("no second-moment state found (state carries no "
+                         "StateMeta annotations)")
+    return total

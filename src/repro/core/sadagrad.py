@@ -3,32 +3,85 @@
 These operate on a single d-dimensional decision vector in the OCO setting
 (Sec. 2) — used by the convex benchmarks that re-create paper Tbl. 3 / Obs. 2.
 All learners expose:  state = init(d);  x, state = step(state, x, g, lr).
+
+S-AdaGrad itself is expressed through the shared ``scale_by_preconditioner``
+engine: a left-only FD sketch over the (d, 1) gradient column with exponent
+-1/2, no EMA (beta2=1), no grafting, refreshed every step.  The remaining
+Appendix-A competitors (Ada-FD, FD-SON, RFD-SON) keep their direct FD forms —
+they exist only as paper baselines.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, ClassVar, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import api, blocking
 from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
 
 
+@dataclasses.dataclass(frozen=True)
+class SAdaGradPreconditioner:
+    """Alg. 2: FD-sketch the gradient stream, compensate with rho_{1:t} I,
+    precondition by the -1/2 root.  ``ell`` is used only at init."""
+    ell: int = 0
+
+    diagonal: ClassVar[bool] = False
+
+    def init_block(self, info: blocking.BlockInfo) -> FDState:
+        st = fd_init(info.bs_m, min(self.ell, info.bs_m))
+        return FDState(*(api.tag(x, "second_moment", blocked=True)
+                         for x in st))
+
+    def update_stats(self, state, G, *, count):
+        return state
+
+    def refresh(self, state, G, *, count):
+        return fd_update(state, G, beta2=1.0)
+
+    def precondition(self, state, G, *, count):
+        return fd_apply_inverse_root(state, G, exponent=-0.5, eps=0.0)
+
+
+def sadagrad(ell: int) -> "api.GradientTransformation":
+    """S-AdaGrad as a composable direction transform on the shared engine."""
+    return api.scale_by_preconditioner(
+        SAdaGradPreconditioner(ell),
+        api.EngineConfig(block_size=1 << 30, beta2=1.0, update_every=1,
+                         graft="none", treat_vectors_as_columns=True))
+
+
+# Update structure never depends on ell (it is read off the state shapes), so
+# one transform instance serves every step call; jitted since the engine step
+# is pure and shape-stable (compiles once per (d, ell)).
+_SADAGRAD_STEP_TX = sadagrad(0)
+
+
+@jax.jit
+def _sadagrad_jit_step(opt_state, x, g, lr):
+    direction, opt = _SADAGRAD_STEP_TX.update(g, opt_state)
+    return x - lr * direction, opt
+
+
 class SAdaGradState(NamedTuple):
-    sketch: FDState
+    opt: Any    # engine PrecondState
+
+    @property
+    def sketch(self) -> FDState:
+        """The (d, ell) FD sketch, unbatched (analysis/back-compat)."""
+        raw = api.untag(self.opt.leaves[0].stats)
+        return jax.tree.map(lambda x: x[0], raw)
 
 
 def sadagrad_init(d: int, ell: int) -> SAdaGradState:
-    return SAdaGradState(sketch=fd_init(d, ell))
+    return SAdaGradState(opt=sadagrad(ell).init(jnp.zeros((d,))))
 
 
 def sadagrad_step(state: SAdaGradState, x, g, lr):
-    """Alg. 2: sketch, compensate with rho_{1:t} I, precondition by -1/2 root."""
-    sketch = fd_update(state.sketch, g[:, None], beta2=1.0)
-    direction = fd_apply_inverse_root(sketch, g[:, None], exponent=-0.5,
-                                      eps=0.0)[:, 0]
-    return x - lr * direction, SAdaGradState(sketch=sketch)
+    new_x, opt = _sadagrad_jit_step(state.opt, x, g, lr)
+    return new_x, SAdaGradState(opt=opt)
 
 
 class AdaFDState(NamedTuple):
@@ -39,6 +92,7 @@ def adafd_init(d: int, ell: int) -> AdaFDState:
     return AdaFDState(sketch=fd_init(d, ell))
 
 
+@jax.jit
 def adafd_step(state: AdaFDState, x, g, lr, delta: float):
     """Ada-FD [26]: FD sketch + *fixed* diagonal delta I (no compensation).
 
@@ -62,6 +116,7 @@ def fdson_init(d: int, ell: int) -> FDSONState:
     return FDSONState(sketch=fd_init(d, ell))
 
 
+@jax.jit
 def fdson_step(state: FDSONState, x, g, lr, delta: float):
     """FD-SON [27]: Online-Newton-Step-style inverse (exponent -1) on the FD
     sketch with fixed delta I."""
@@ -80,6 +135,7 @@ def rfdson_init(d: int, ell: int) -> RFDSONState:
     return RFDSONState(sketch=fd_init(d, ell))
 
 
+@jax.jit
 def rfdson_step(state: RFDSONState, x, g, lr):
     """RFD-SON [43] (delta=0 "RFD_0" variant): robust FD compensates with
     rho_{1:t}/2 in the ONS-style inverse."""
@@ -98,6 +154,7 @@ def adagrad_init(d: int) -> DiagAdaGradState:
     return DiagAdaGradState(acc=jnp.zeros((d,)))
 
 
+@jax.jit
 def adagrad_step(state: DiagAdaGradState, x, g, lr):
     acc = state.acc + jnp.square(g)
     return x - lr * g * jax.lax.rsqrt(acc + 1e-12), DiagAdaGradState(acc=acc)

@@ -1,19 +1,21 @@
-"""Full (blocked) Shampoo baseline — the paper's primary comparison.
+"""Full (blocked) Shampoo baseline — the paper's primary comparison — as a
+small ``Preconditioner`` on the shared ``scale_by_preconditioner`` engine.
 
 Kronecker-factored preconditioning with *dense* per-block factors
-L (bm x bm), R (bn x bn), EMA statistics, inverse 4th roots recomputed every
-``root_every`` steps via eigh (the ``eigh=True`` path the paper uses, App. E).
-Second-moment memory is O(bm^2 + bn^2) per block — what Sketchy reduces.
+L (bm x bm), R (bn x bn), EMA statistics accumulated every step, inverse 4th
+roots recomputed every ``root_every`` steps via eigh (the ``eigh=True`` path
+the paper uses, App. E).  Second-moment memory is O(bm^2 + bn^2) per block —
+what Sketchy reduces.  Blocking, grafting, the diagonal fallback, and gating
+live in the engine (core/api.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any, ClassVar, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import blocking
+from repro.core import api, blocking
 from repro.core.transform import GradientTransformation
 
 
@@ -29,112 +31,70 @@ class ShampooConfig:
     state_dtype: Any = jnp.float32
 
 
-class ShampooMatrixLeaf(NamedTuple):
-    L: jnp.ndarray       # (S, bm, bm)
-    R: jnp.ndarray       # (S, bn, bn)
+class ShampooBlockStats(NamedTuple):
+    L: jnp.ndarray       # (bm, bm) EMA statistic
+    R: jnp.ndarray       # (bn, bn)
     PL: jnp.ndarray      # cached L^{-1/4}
     PR: jnp.ndarray      # cached R^{-1/4}
-    graft_acc: jnp.ndarray
 
 
-class ShampooDiagLeaf(NamedTuple):
-    acc: jnp.ndarray
+def _inv_root(m: jnp.ndarray, eps: float, power: float) -> jnp.ndarray:
+    """(d, d) PSD -> (M + eps*I)^{power} via eigh."""
+    d = m.shape[-1]
+    lam, V = jnp.linalg.eigh(m + eps * jnp.eye(d, dtype=m.dtype))
+    lam = jnp.maximum(lam, eps)
+    return (V * jnp.power(lam, power)[None, :]) @ V.T
 
 
-class ShampooState(NamedTuple):
-    count: jnp.ndarray
-    leaves: tuple
+@dataclasses.dataclass(frozen=True)
+class ShampooPreconditioner:
+    """Dense L/R factors + cached inverse roots (per block)."""
+    cfg: ShampooConfig
 
+    diagonal: ClassVar[bool] = False
 
-def _inv_root(mats: jnp.ndarray, eps: float, power: float) -> jnp.ndarray:
-    """(S, d, d) PSD -> (M + eps*I)^{power} via batched eigh."""
-    def one(m):
-        d = m.shape[-1]
-        lam, V = jnp.linalg.eigh(m + eps * jnp.eye(d, dtype=m.dtype))
-        lam = jnp.maximum(lam, eps)
-        return (V * jnp.power(lam, power)[None, :]) @ V.T
+    def init_block(self, info: blocking.BlockInfo) -> ShampooBlockStats:
+        dt = self.cfg.state_dtype
+        return ShampooBlockStats(
+            L=api.tag(jnp.zeros((info.bs_m, info.bs_m), dt),
+                      "second_moment", blocked=True),
+            R=api.tag(jnp.zeros((info.bs_n, info.bs_n), dt),
+                      "second_moment", blocked=True),
+            PL=api.tag(jnp.eye(info.bs_m, dtype=dt),
+                       "preconditioner", blocked=True),
+            PR=api.tag(jnp.eye(info.bs_n, dtype=dt),
+                       "preconditioner", blocked=True))
 
-    return jax.vmap(one)(mats)
+    def update_stats(self, state, G, *, count):
+        # statistics every step (classic Shampoo; the FD variant is
+        # restricted to every 10th — see paper §6 "more difficult setting")
+        # un-normalized EMA (distributed-Shampoo convention; matches the
+        # FD recursion of Obs. 6 so rank>=dim recovers Shampoo exactly)
+        return ShampooBlockStats(
+            L=self.cfg.beta2 * state.L + G @ G.T,
+            R=self.cfg.beta2 * state.R + G.T @ G,
+            PL=state.PL, PR=state.PR)
+
+    def refresh(self, state, G, *, count):
+        return ShampooBlockStats(
+            L=state.L, R=state.R,
+            PL=_inv_root(state.L, self.cfg.matrix_eps, -0.25),
+            PR=_inv_root(state.R, self.cfg.matrix_eps, -0.25))
+
+    def precondition(self, state, G, *, count):
+        return state.PL @ G @ state.PR
 
 
 def shampoo(cfg: ShampooConfig = ShampooConfig()) -> GradientTransformation:
-    from repro.core.sketchy import _graft_direction, SketchyConfig
-
-    graft_cfg = SketchyConfig(beta2=cfg.beta2, graft=cfg.graft,
-                              graft_eps=cfg.graft_eps)
-
-    def init_leaf(p):
-        info = blocking.analyze(p.shape, cfg.block_size)
-        if info.kind == "diag":
-            return ShampooDiagLeaf(acc=jnp.zeros(p.shape, cfg.state_dtype))
-        S = info.num_blocks
-        eye_m = jnp.eye(info.bs_m, dtype=cfg.state_dtype)
-        eye_n = jnp.eye(info.bs_n, dtype=cfg.state_dtype)
-        zeros = lambda d: jnp.zeros((S, d, d), cfg.state_dtype)
-        return ShampooMatrixLeaf(
-            L=zeros(info.bs_m), R=zeros(info.bs_n),
-            PL=jnp.broadcast_to(eye_m, (S, info.bs_m, info.bs_m)),
-            PR=jnp.broadcast_to(eye_n, (S, info.bs_n, info.bs_n)),
-            graft_acc=jnp.zeros(p.shape, cfg.state_dtype),
-        )
-
-    def init_fn(params):
-        leaves = tuple(init_leaf(p) for p in jax.tree.leaves(params))
-        return ShampooState(count=jnp.zeros([], jnp.int32), leaves=leaves)
-
-    def update_leaf(g, st, count):
-        g32 = g.astype(jnp.float32)
-        info = blocking.analyze(g.shape, cfg.block_size)
-        if info.kind == "diag":
-            acc = cfg.beta2 * st.acc + (1.0 - cfg.beta2) * jnp.square(g32)
-            return (g32 * jax.lax.rsqrt(acc + cfg.graft_eps)).astype(g.dtype), \
-                ShampooDiagLeaf(acc=acc)
-
-        gb = blocking.to_blocks(g32, info)
-        # statistics every step (classic Shampoo; FD variant is restricted to
-        # every 10th — see paper §6 "more difficult setting for S-Shampoo")
-        # un-normalized EMA (distributed-Shampoo convention; matches the
-        # FD recursion of Obs. 6 so rank>=dim recovers Shampoo exactly)
-        L = cfg.beta2 * st.L + jnp.einsum("sij,skj->sik", gb, gb)
-        R = cfg.beta2 * st.R + jnp.einsum("sji,sjk->sik", gb, gb)
-
-        def refresh(_):
-            return _inv_root(L, cfg.matrix_eps, -0.25), _inv_root(R, cfg.matrix_eps, -0.25)
-
-        do_roots = (count % cfg.root_every) == 0
-        PL, PR = jax.lax.cond(do_roots, refresh, lambda _: (st.PL, st.PR), None)
-
-        pb = jnp.einsum("sij,sjk,skl->sil", PL, gb, PR)
-        precond = blocking.from_blocks(pb, info)
-
-        graft_dir, new_acc = _graft_direction(g32, st.graft_acc, graft_cfg)
-        if cfg.graft != "none":
-            precond = precond * (jnp.linalg.norm(graft_dir)
-                                 / (jnp.linalg.norm(precond) + 1e-16))
-        use_precond = count >= cfg.start_preconditioning_step
-        direction = jnp.where(use_precond, precond, graft_dir)
-        return direction.astype(g.dtype), ShampooMatrixLeaf(L, R, PL, PR, new_acc)
-
-    def update_fn(updates, state, params=None):
-        del params
-        flat, treedef = jax.tree.flatten(updates)
-        out, leaves = [], []
-        for g, st in zip(flat, state.leaves):
-            d, ns = update_leaf(g, st, state.count)
-            out.append(d)
-            leaves.append(ns)
-        return (jax.tree.unflatten(treedef, out),
-                ShampooState(count=state.count + 1, leaves=tuple(leaves)))
-
-    return GradientTransformation(init_fn, update_fn)
+    return api.scale_by_preconditioner(
+        ShampooPreconditioner(cfg),
+        api.EngineConfig(
+            block_size=cfg.block_size, beta2=cfg.beta2,
+            update_every=cfg.root_every,
+            start_preconditioning_step=cfg.start_preconditioning_step,
+            graft=cfg.graft, graft_eps=cfg.graft_eps,
+            state_dtype=cfg.state_dtype))
 
 
-def second_moment_bytes(state: ShampooState) -> int:
-    total = 0
-    for leaf in state.leaves:
-        if isinstance(leaf, ShampooMatrixLeaf):
-            total += leaf.L.size * leaf.L.dtype.itemsize
-            total += leaf.R.size * leaf.R.dtype.itemsize
-        else:
-            total += leaf.acc.size * leaf.acc.dtype.itemsize
-    return total
+def second_moment_bytes(state) -> int:
+    return api.second_moment_bytes(state)

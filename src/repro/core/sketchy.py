@@ -1,5 +1,5 @@
-"""Sketchy Shampoo (paper Alg. 3 + Obs. 6 EMA variant) as a composable
-GradientTransformation.
+"""Sketchy Shampoo (paper Alg. 3 + Obs. 6 EMA variant) as a small
+``Preconditioner`` on the shared ``scale_by_preconditioner`` engine.
 
 Per matrix block (paper §3.4 blocking, default 1024):
   every ``update_every`` steps (paper observes only every 10th gradient —
@@ -12,19 +12,19 @@ computed entirely in factored (U, s, rho) form — the d x d preconditioner is
 never materialized and the second-moment state is O((m+n) * ell) per block
 instead of O(m^2 + n^2) (Shampoo) or O(mn) (Adam).
 
-Vectors/scalars take the diagonal (RMSProp) path, as Shampoo itself does.
-Grafting (paper App. C: RMSPROP_NORMALIZED) supplies the per-tensor step size.
+Blocking, the diagonal (RMSProp) path for vectors/scalars, grafting (paper
+App. C: RMSPROP_NORMALIZED), and the ``update_every`` /
+``start_preconditioning_step`` gating all live in the engine (core/api.py);
+this module only supplies the FD sketch pair.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, ClassVar, NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import blocking
+from repro.core import api, blocking
 from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
 from repro.core.transform import GradientTransformation
 
@@ -44,49 +44,53 @@ class SketchyConfig:
     use_kernels: bool = False       # route matmuls through Pallas ops
 
 
-class MatrixLeafState(NamedTuple):
-    left: FDState     # batched over blocks: (S, bm, ell), (S, ell), (S,)
+class SketchyBlockStats(NamedTuple):
+    """Per-block FD sketch pair; in engine state these are batched over the
+    leaf's block stack: eigvecs (S, d, ell), eigvals (S, ell), rho (S,)."""
+    left: FDState
     right: FDState
-    graft_acc: jnp.ndarray
 
 
-class DiagLeafState(NamedTuple):
-    acc: jnp.ndarray
+def _tag_fd(st: FDState) -> FDState:
+    return FDState(*(api.tag(x, "second_moment", blocked=True) for x in st))
 
 
-class SketchyState(NamedTuple):
-    count: jnp.ndarray
-    leaves: tuple
+@dataclasses.dataclass(frozen=True)
+class SketchyPreconditioner:
+    """FD sketch pair (paper Alg. 3) — the whole optimizer-specific surface."""
+    cfg: SketchyConfig
+    gram_fn: Optional[Callable] = None
+    lowrank_fn: Optional[Callable] = None
 
+    diagonal: ClassVar[bool] = False
 
-def _graft_direction(g, acc, cfg: SketchyConfig):
-    """Returns (graft_direction, new_acc). g, acc float32."""
-    if cfg.graft == "none":
-        return g, acc
-    if cfg.graft == "rmsprop_normalized":
-        gn = g / (jnp.linalg.norm(g) + 1e-16)
-    else:
-        gn = g
-    acc = cfg.beta2 * acc + (1.0 - cfg.beta2) * jnp.square(gn)
-    return gn * jax.lax.rsqrt(acc + cfg.graft_eps), acc
+    def init_block(self, info: blocking.BlockInfo) -> SketchyBlockStats:
+        ell_l = min(self.cfg.rank, info.bs_m)
+        ell_r = min(self.cfg.rank, info.bs_n)
+        return SketchyBlockStats(
+            left=_tag_fd(fd_init(info.bs_m, ell_l, self.cfg.state_dtype)),
+            right=_tag_fd(fd_init(info.bs_n, ell_r, self.cfg.state_dtype)))
 
+    def update_stats(self, state, G, *, count):
+        return state  # FD observation is the gated refresh, not per-step
 
-def _vmapped_fd_update(states: FDState, factors: jnp.ndarray, beta2: float,
-                       gram_fn=None) -> FDState:
-    return jax.vmap(lambda s, a: fd_update(s, a, beta2, gram_fn=gram_fn))(states, factors)
+    def refresh(self, state, G, *, count):
+        return SketchyBlockStats(
+            left=fd_update(state.left, G, self.cfg.beta2,
+                           gram_fn=self.gram_fn),
+            right=fd_update(state.right, G.T, self.cfg.beta2,
+                            gram_fn=self.gram_fn))
 
-
-def _precondition_blocks(left: FDState, right: FDState, gb: jnp.ndarray,
-                         cfg: SketchyConfig, lowrank_fn=None) -> jnp.ndarray:
-    """P = L^{-1/4} G R^{-1/4} per block, factored form."""
-    def one(ls, rs, G):
-        tmp = fd_apply_inverse_root(ls, G, exponent=cfg.exponent,
-                                    eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
-        tmpT = fd_apply_inverse_root(rs, tmp.T, exponent=cfg.exponent,
-                                     eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
+    def precondition(self, state, G, *, count):
+        tmp = fd_apply_inverse_root(state.left, G,
+                                    exponent=self.cfg.exponent,
+                                    eps=self.cfg.matrix_eps,
+                                    lowrank_fn=self.lowrank_fn)
+        tmpT = fd_apply_inverse_root(state.right, tmp.T,
+                                     exponent=self.cfg.exponent,
+                                     eps=self.cfg.matrix_eps,
+                                     lowrank_fn=self.lowrank_fn)
         return tmpT.T
-
-    return jax.vmap(one)(left, right, gb)
 
 
 def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
@@ -99,87 +103,17 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
         gram_fn = gram_ops.gram
         lowrank_fn = lowrank_ops.lowrank_apply
 
-    def init_leaf(p):
-        info = blocking.analyze(p.shape, cfg.block_size)
-        if info.kind == "diag":
-            return DiagLeafState(acc=jnp.zeros(p.shape, cfg.state_dtype))
-        S = info.num_blocks
-        ell_l = min(cfg.rank, info.bs_m)
-        ell_r = min(cfg.rank, info.bs_n)
-
-        def batched_fd(d, ell):
-            base = fd_init(d, ell, cfg.state_dtype)
-            return FDState(*[jnp.broadcast_to(x, (S,) + x.shape) for x in base])
-
-        return MatrixLeafState(
-            left=batched_fd(info.bs_m, ell_l),
-            right=batched_fd(info.bs_n, ell_r),
-            graft_acc=jnp.zeros(p.shape, cfg.state_dtype),
-        )
-
-    def init_fn(params):
-        leaves = tuple(init_leaf(p) for p in jax.tree.leaves(params))
-        return SketchyState(count=jnp.zeros([], jnp.int32), leaves=leaves)
-
-    def update_leaf(g, st, count):
-        g32 = g.astype(jnp.float32)
-        info = blocking.analyze(g.shape, cfg.block_size)
-        if info.kind == "diag":
-            acc = cfg.beta2 * st.acc + (1.0 - cfg.beta2) * jnp.square(g32)
-            direction = g32 * jax.lax.rsqrt(acc + cfg.graft_eps)
-            return direction.astype(g.dtype), DiagLeafState(acc=acc)
-
-        gb = blocking.to_blocks(g32, info)  # (S, bm, bn)
-        gbT = jnp.swapaxes(gb, -1, -2)
-
-        do_stats = (count % cfg.update_every) == 0
-
-        def with_stats(s):
-            return MatrixLeafState(
-                left=_vmapped_fd_update(s.left, gb, cfg.beta2, gram_fn),
-                right=_vmapped_fd_update(s.right, gbT, cfg.beta2, gram_fn),
-                graft_acc=s.graft_acc,
-            )
-
-        st = jax.lax.cond(do_stats, with_stats, lambda s: s, st)
-
-        pb = _precondition_blocks(st.left, st.right, gb, cfg, lowrank_fn)
-        precond = blocking.from_blocks(pb, info)
-
-        graft_dir, new_acc = _graft_direction(g32, st.graft_acc, cfg)
-        if cfg.graft != "none":
-            pnorm = jnp.linalg.norm(precond)
-            gnorm = jnp.linalg.norm(graft_dir)
-            precond = precond * (gnorm / (pnorm + 1e-16))
-
-        use_precond = count >= cfg.start_preconditioning_step
-        direction = jnp.where(use_precond, precond, graft_dir)
-        return direction.astype(g.dtype), MatrixLeafState(st.left, st.right, new_acc)
-
-    def update_fn(updates, state, params=None):
-        del params
-        flat, treedef = jax.tree.flatten(updates)
-        out_flat, new_leaves = [], []
-        for g, st in zip(flat, state.leaves):
-            d, ns = update_leaf(g, st, state.count)
-            out_flat.append(d)
-            new_leaves.append(ns)
-        return (jax.tree.unflatten(treedef, out_flat),
-                SketchyState(count=state.count + 1, leaves=tuple(new_leaves)))
-
-    return GradientTransformation(init_fn, update_fn)
+    return api.scale_by_preconditioner(
+        SketchyPreconditioner(cfg, gram_fn=gram_fn, lowrank_fn=lowrank_fn),
+        api.EngineConfig(
+            block_size=cfg.block_size, beta2=cfg.beta2,
+            update_every=cfg.update_every,
+            start_preconditioning_step=cfg.start_preconditioning_step,
+            graft=cfg.graft, graft_eps=cfg.graft_eps,
+            state_dtype=cfg.state_dtype))
 
 
-def second_moment_bytes(state: SketchyState) -> int:
-    """Bytes used for second-moment (covariance) tracking — the paper's
-    headline memory quantity (excludes grafting/momentum, as Fig. 1 does)."""
-    total = 0
-    for leaf in state.leaves:
-        if isinstance(leaf, MatrixLeafState):
-            for fs in (leaf.left, leaf.right):
-                total += fs.eigvecs.size * fs.eigvecs.dtype.itemsize
-                total += fs.eigvals.size * fs.eigvals.dtype.itemsize
-                total += fs.rho.size * fs.rho.dtype.itemsize
-        else:
-            total += leaf.acc.size * leaf.acc.dtype.itemsize
-    return total
+def second_moment_bytes(state) -> int:
+    """Covariance-tracking bytes — the paper's headline memory quantity
+    (excludes grafting/momentum, as Fig. 1 does)."""
+    return api.second_moment_bytes(state)

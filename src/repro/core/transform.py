@@ -91,29 +91,37 @@ def momentum(beta1: float, *, ema: bool = True, dtype=None) -> GradientTransform
 
     ema=True matches the paper's ``moving_average_for_momentum``:
     final update is ``beta1 * mu_t + (1 - beta1) * g_t``.
+
+    State leaves carry ``StateMeta(role='momentum', param_index=i)`` so
+    sharding/checkpoint/memory consumers handle them by metadata.
     """
+    from repro.core import api  # deferred: api imports this module
 
     def init_fn(params):
-        return TraceState(
-            momentum=jax.tree.map(
-                lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params
-            )
-        )
+        flat, treedef = jax.tree.flatten(params)
+        mom = [api.tag(jnp.zeros_like(p, dtype=dtype or p.dtype),
+                       "momentum", param_index=i)
+               for i, p in enumerate(flat)]
+        return TraceState(momentum=jax.tree.unflatten(treedef, mom))
 
     def update_fn(updates, state, params=None):
         del params
+        # map over (updates, momentum): updates' leaf positions align with
+        # the Tagged nodes, so each fn call sees (grad leaf, Tagged).
         if ema:
             mu = jax.tree.map(
-                lambda m, u: beta1 * m + (1.0 - beta1) * u.astype(m.dtype),
-                state.momentum, updates,
+                lambda u, t: api.Tagged(
+                    beta1 * t.value + (1.0 - beta1) * u.astype(t.value.dtype),
+                    t.meta),
+                updates, state.momentum,
             )
-            out = mu
         else:
             mu = jax.tree.map(
-                lambda m, u: beta1 * m + u.astype(m.dtype), state.momentum, updates
+                lambda u, t: api.Tagged(beta1 * t.value + u.astype(t.value.dtype),
+                                        t.meta),
+                updates, state.momentum,
             )
-            out = mu
-        out = jax.tree.map(lambda o, u: o.astype(u.dtype), out, updates)
+        out = jax.tree.map(lambda u, t: t.value.astype(u.dtype), updates, mu)
         return out, TraceState(momentum=mu)
 
     return GradientTransformation(init_fn, update_fn)

@@ -10,6 +10,12 @@ on a background thread, overlapping with subsequent train steps.
 Restore is mesh-agnostic: leaves are loaded on host and ``device_put`` with
 whatever shardings the *current* mesh dictates — so a job can restart on a
 different pod count (elastic re-mesh, train/elastic.py).
+
+Manifests walk ``StateMeta`` (core/api.py): every leaf record carries the
+role/blocked annotation of its ``Tagged`` wrapper (null for plain leaves),
+and restore cross-checks recorded roles against the template's metadata —
+a structural mismatch between optimizer variants fails loudly instead of
+silently loading a momentum buffer into a second-moment slot.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ from typing import Any, Optional
 import numpy as np
 
 import jax
+
+from repro.core import api
 
 PyTree = Any
 
@@ -38,10 +46,23 @@ def _flatten_with_names(tree: PyTree):
     return named, flat[1]
 
 
+def _meta_records(tree: PyTree):
+    """Per-leaf StateMeta dicts (or None), aligned with the full flatten."""
+    out = []
+    for meta, _ in api.leaves_with_meta(tree):
+        if meta is None:
+            out.append(None)
+        else:
+            out.append({"role": meta.role, "blocked": meta.blocked,
+                        "param_index": meta.param_index})
+    return out
+
+
 def save(directory: str, step: int, state: PyTree, *,
          extra: Optional[dict] = None) -> str:
     """Synchronous atomic save. Returns the final path."""
     named, _ = _flatten_with_names(state)
+    metas = _meta_records(state)
     tmp = os.path.join(directory, f"tmp-{step}")
     final = os.path.join(directory, f"step-{step}")
     if os.path.exists(tmp):
@@ -49,13 +70,14 @@ def save(directory: str, step: int, state: PyTree, *,
     os.makedirs(tmp, exist_ok=True)
 
     manifest = {"step": step, "leaves": [], "extra": extra or {}}
-    for i, (name, leaf) in enumerate(named):
+    for i, ((name, leaf), meta) in enumerate(zip(named, metas)):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf-{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"].append({"name": name, "file": fname,
                                    "dtype": str(arr.dtype),
-                                   "shape": list(arr.shape)})
+                                   "shape": list(arr.shape),
+                                   "meta": meta})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -101,6 +123,7 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
         manifest = json.load(f)
 
     named, treedef = _flatten_with_names(template)
+    metas = _meta_records(template)
     if len(named) != len(manifest["leaves"]):
         raise ValueError(
             f"checkpoint has {len(manifest['leaves'])} leaves, template has "
@@ -111,9 +134,16 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
         if shardings is not None else [None] * len(named))
 
     leaves = []
-    for (name, tmpl), rec, sh in zip(named, manifest["leaves"], sh_flat):
+    for (name, tmpl), meta, rec, sh in zip(named, metas, manifest["leaves"],
+                                           sh_flat):
         if name != rec["name"]:
             raise ValueError(f"leaf mismatch: {name} vs {rec['name']}")
+        rec_meta = rec.get("meta")
+        if meta is not None and rec_meta is not None \
+                and rec_meta["role"] != meta["role"]:
+            raise ValueError(
+                f"state-role mismatch at {name}: checkpoint has "
+                f"{rec_meta['role']!r}, template expects {meta['role']!r}")
         arr = np.load(os.path.join(path, rec["file"]))
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))

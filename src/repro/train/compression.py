@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding.rules import shard_map
+
 PyTree = Any
 
 
@@ -35,9 +37,10 @@ def _quantized_psum(g: jnp.ndarray, axes: Sequence[str], key) -> jnp.ndarray:
     summed = q.astype(jnp.int32)
     for a in axes:
         summed = jax.lax.psum(summed, a)
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
+    # axis extent without jax.lax.axis_size (absent in jax <= 0.4.x)
+    n = jax.lax.psum(1, axes[0])
+    for a in axes[1:]:
+        n *= jax.lax.psum(1, a)
     return (summed.astype(jnp.float32) * scale / n).astype(g.dtype)
 
 
@@ -56,7 +59,7 @@ def compressed_mean_grads(grads: PyTree, mesh: Mesh,
     flat, treedef = jax.tree.flatten(grads)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=tuple(P() for _ in flat), out_specs=tuple(P() for _ in flat),
         check_vma=False)
     def reduce_all(*leaves):

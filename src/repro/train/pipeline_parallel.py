@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding.rules import shard_map
+
 
 def gpipe_apply(mesh: Mesh, axis: str, layers, block_fn: Callable,
                 x: jnp.ndarray, microbatches: int) -> jnp.ndarray:
@@ -36,7 +38,7 @@ def gpipe_apply(mesh: Mesh, axis: str, layers, block_fn: Callable,
     layer_specs = jax.tree.map(lambda _: P(axis), layers)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(layer_specs, P()), out_specs=P(),
         check_vma=False)
     def run(local_layers, xm):

@@ -5,26 +5,23 @@
 model), optional microbatched gradient accumulation, optimizer update.
 
 ``train_state_shardings`` assigns NamedShardings to every optimizer-state
-leaf by type dispatch: param-shaped leaves (momentum, grafting) inherit the
-parameter sharding; Sketchy/Shampoo per-block factors shard their leading
-blocks dim over the fsdp axis ('data') so second-moment state is fully
-distributed.
+leaf by walking the ``StateMeta`` annotations (core/api.py): param-shaped
+leaves (momentum, grafting, diag accumulators) inherit the owning
+parameter's sharding via ``meta.param_index``; blocked leaves (Sketchy FD
+sketches, Shampoo factors) shard their leading blocks dim over the
+model-major axes; counts/hyperparams replicate.  No optimizer-specific
+types appear here — a new Preconditioner shards correctly for free.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import sketchy as sketchy_lib
-from repro.core import shampoo as shampoo_lib
-from repro.core import adam as adam_lib
-from repro.core.fd import FDState
-from repro.core.transform import (GradientTransformation, ScaleByScheduleState,
-                                  TraceState, EmptyState, apply_updates)
+from repro.core import api
+from repro.core.transform import GradientTransformation, apply_updates
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.sharding import rules as rules_lib
@@ -106,60 +103,23 @@ def _blocks_sharding(rules: rules_lib.MeshRules, leaf) -> NamedSharding:
 
 def train_state_shardings(opt_state: PyTree, params: PyTree,
                           rules: rules_lib.MeshRules) -> PyTree:
-    """NamedShardings for an optimizer-state pytree (works on structs)."""
+    """NamedShardings for an optimizer-state pytree (works on structs).
+
+    Pure ``StateMeta`` traversal: no isinstance checks against optimizer
+    leaf types anywhere."""
     param_shardings = rules_lib.tree_param_shardings(params, rules)
     flat_param_sh = jax.tree.leaves(
         param_shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
     repl = NamedSharding(rules.mesh, P())
 
-    def fd_sharding(fs: FDState) -> FDState:
-        return FDState(
-            eigvecs=_blocks_sharding(rules, fs.eigvecs),
-            eigvals=_blocks_sharding(rules, fs.eigvals),
-            rho=_blocks_sharding(rules, fs.rho),
-        )
+    def assign(meta: Optional[api.StateMeta], leaf) -> NamedSharding:
+        if meta is None or meta.shard == "replicate" \
+                or meta.role in ("count", "hyperparam"):
+            return repl
+        if meta.param_index is not None and meta.shard in ("auto", "param"):
+            return flat_param_sh[meta.param_index]
+        if meta.blocked or meta.shard == "blocks":
+            return _blocks_sharding(rules, leaf)
+        return repl
 
-    def leaf_states(states):
-        out = []
-        for st, psh in zip(states, flat_param_sh):
-            if isinstance(st, sketchy_lib.MatrixLeafState):
-                out.append(sketchy_lib.MatrixLeafState(
-                    left=fd_sharding(st.left), right=fd_sharding(st.right),
-                    graft_acc=psh))
-            elif isinstance(st, sketchy_lib.DiagLeafState):
-                out.append(sketchy_lib.DiagLeafState(acc=psh))
-            elif isinstance(st, shampoo_lib.ShampooMatrixLeaf):
-                out.append(shampoo_lib.ShampooMatrixLeaf(
-                    L=_blocks_sharding(rules, st.L),
-                    R=_blocks_sharding(rules, st.R),
-                    PL=_blocks_sharding(rules, st.PL),
-                    PR=_blocks_sharding(rules, st.PR),
-                    graft_acc=psh))
-            elif isinstance(st, shampoo_lib.ShampooDiagLeaf):
-                out.append(shampoo_lib.ShampooDiagLeaf(acc=psh))
-            else:
-                raise TypeError(type(st))
-        return tuple(out)
-
-    def one(state):
-        if isinstance(state, sketchy_lib.SketchyState):
-            return sketchy_lib.SketchyState(count=repl,
-                                            leaves=leaf_states(state.leaves))
-        if isinstance(state, shampoo_lib.ShampooState):
-            return shampoo_lib.ShampooState(count=repl,
-                                            leaves=leaf_states(state.leaves))
-        if isinstance(state, adam_lib.AdamState):
-            return adam_lib.AdamState(count=repl, mu=param_shardings,
-                                      nu=param_shardings)
-        if isinstance(state, TraceState):
-            return TraceState(momentum=param_shardings)
-        if isinstance(state, ScaleByScheduleState):
-            return ScaleByScheduleState(count=repl)
-        if isinstance(state, EmptyState):
-            return EmptyState()
-        if isinstance(state, tuple) and not hasattr(state, "_fields"):
-            return tuple(one(s) for s in state)
-        # fallback: replicate any unknown scalar-ish state
-        return jax.tree.map(lambda _: repl, state)
-
-    return one(opt_state)
+    return api.map_with_meta(assign, opt_state)

@@ -1,0 +1,58 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Samples a fixed number of pseudo-random examples per test (deterministic
+seed) instead of doing real property search/shrinking.  Supports exactly the
+subset this suite uses: ``@settings(max_examples=, deadline=)``, ``@given``
+with keyword strategies, and ``strategies.integers/lists/sampled_from``.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elements.sample(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see a zero-arg signature, not
+        # the strategy kwargs (it would look for fixtures named after them).
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                fn(**{k: s.sample(rng) for k, s in strats.items()})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Blocking roundtrip properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import blocking
 

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.fd import (FDState, fd_apply_inverse_root, fd_covariance,
                            fd_init, fd_update)

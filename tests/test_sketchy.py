@@ -96,7 +96,7 @@ def test_step_skipping_updates_every_k():
     changed = []
     for t in range(7):
         u, state = tx.update(jax.grad(loss)(p), state, p)
-        cur = np.asarray(state.leaves[0].left.eigvals)
+        cur = np.asarray(state.leaves[0].stats.left.eigvals.value)
         if prev is not None:
             changed.append(not np.allclose(cur, prev))
         prev = cur.copy()
