@@ -1,15 +1,21 @@
 """Benchmark harness — one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows (and, with ``--json PATH``,
+writes the same rows as a machine-readable JSON list for trajectory files):
   fig1_memory_<opt>        second-moment bytes for a BERT-large-ish layer set
   tbl3_convex_<dataset>    average cumulative online loss per learner
   fig3_spectral_decay      intrinsic dim + top-256 mass of EMA Kron factors
   lem1_fd_error            FD op-norm error vs the Lemma-1 bound
   fig2_lm_quality          small-LM loss after N steps per optimizer
   opt_step_time            wall-time per optimizer step (CPU, small shapes)
+  opt_step_time_multileaf  pooled-engine step over a >=100-leaf tree: wall
+                           time + compiled-computation (jaxpr eqn) counts vs
+                           the per-leaf dispatch baseline
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -17,8 +23,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# rows accumulated for --json output: (name, us_per_call, derived)
+_ROWS: list = []
+
 
 def _row(name, us, derived):
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -71,6 +82,14 @@ def bench_tbl3_convex(T: int = 400) -> None:
         y = np.sign(feats @ w + 0.1 * rng.normal(size=T))
         return feats * y[:, None]
 
+    # jitted ONCE outside the per-step loop — the old per-step
+    # ``jax.grad(lambda ...)`` built a fresh traced function every
+    # iteration, so the bench measured trace overhead, not step time.
+    @jax.jit
+    def loss_and_grad(x, a):
+        return jax.value_and_grad(
+            lambda xx: jnp.log1p(jnp.exp(-a @ xx)))(x)
+
     for kind in ("decay", "lowrank"):
         A = stream(0, 32, T, kind)
         results = {}
@@ -86,8 +105,8 @@ def bench_tbl3_convex(T: int = 400) -> None:
                     tot = 0.0
                     for a in A:
                         aj = jnp.asarray(a, jnp.float32)
-                        tot += float(jnp.log1p(jnp.exp(-aj @ x)))
-                        g = jax.grad(lambda x: jnp.log1p(jnp.exp(-aj @ x)))(x)
+                        loss, g = loss_and_grad(x, aj)
+                        tot += float(loss)
                         args = (st, x, g, lr) + ((delta,) if delta is not None
                                                  else ())
                         x, st = step(*args)
@@ -210,7 +229,77 @@ def bench_opt_step_time(iters: int = 20) -> None:
         _row(f"opt_step_time_{name}", us, "1024x1024 block, update_every=10")
 
 
-def main() -> None:
+def _count_prim(jaxpr, substr: str = "") -> int:
+    """Call sites of primitives whose name contains ``substr``, recursing
+    into sub-jaxprs (cond branches, vmapped/scanned bodies).  With the empty
+    substring this is the total equation count — the 'how many compiled
+    optimizer computations' measure: per-leaf dispatch multiplies it by the
+    leaf count, pooling doesn't."""
+    def subs(v):
+        if hasattr(v, "eqns"):
+            yield v
+        elif hasattr(v, "jaxpr"):
+            yield from subs(v.jaxpr)
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from subs(x)
+
+    n = sum(substr in eqn.primitive.name for eqn in jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sj in subs(v):
+                n += _count_prim(sj, substr)
+    return n
+
+
+def bench_opt_step_time_multileaf(n_leaves: int = 128, iters: int = 10) -> None:
+    """Pooled-engine dispatch over a many-leaf tree (the transformer case:
+    hundreds of same-shaped parameters).  Derived column reports the pooled
+    jaxpr equation count next to the per-leaf baseline (= n_leaves x the
+    single-leaf engine's count — what the pre-pool engine compiled)."""
+    from repro.core.sketchy import SketchyConfig, sketchy
+
+    rng = np.random.default_rng(0)
+    cfg = SketchyConfig(rank=4, block_size=16, update_every=10)
+    mk = lambda: jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    params = {f"w{i:03d}": mk() for i in range(n_leaves)}
+    g = {k: mk() for k in params}
+    tx = sketchy(cfg)
+    state = tx.init(params)
+
+    pooled_jaxpr = jax.make_jaxpr(lambda gg, s: tx.update(gg, s))(g, state).jaxpr
+    pooled_eqns = _count_prim(pooled_jaxpr)
+    pooled_eigh = _count_prim(pooled_jaxpr, "eig")
+    p1, g1 = {"w": mk()}, {"w": mk()}
+    tx1 = sketchy(cfg)
+    s1 = tx1.init(p1)
+    single_jaxpr = jax.make_jaxpr(lambda gg, s: tx1.update(gg, s))(g1, s1).jaxpr
+    per_leaf_eqns = n_leaves * _count_prim(single_jaxpr)
+    per_leaf_eigh = n_leaves * _count_prim(single_jaxpr, "eig")
+
+    upd = jax.jit(lambda gg, s: tx.update(gg, s))
+    u, st = upd(g, state)   # compile
+    jax.block_until_ready(u)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        u, st = upd(g, st)
+    jax.block_until_ready(u)
+    us = (time.perf_counter() - t0) * 1e6 / iters
+    _row("opt_step_time_multileaf", us,
+         f"leaves={n_leaves} pooled_eqns={pooled_eqns} "
+         f"per_leaf_eqns={per_leaf_eqns} "
+         f"reduction={per_leaf_eqns / pooled_eqns:.1f}x "
+         f"eigh_sites={pooled_eigh}_vs_{per_leaf_eigh}")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="also write the rows as a JSON list (machine-"
+                        "readable trajectory output, e.g. BENCH_opt.json)")
+    args = p.parse_args(argv)
+
+    _ROWS.clear()   # repeat-safe: direct bench_* calls may have accumulated
     print("name,us_per_call,derived")
     bench_fig1_memory()
     bench_lem1_fd_error()
@@ -218,6 +307,12 @@ def main() -> None:
     bench_fig3_spectral_decay()
     bench_fig2_lm_quality()
     bench_opt_step_time()
+    bench_opt_step_time_multileaf()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_ROWS, f, indent=1)
+        print(f"wrote {len(_ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

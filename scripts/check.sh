@@ -1,8 +1,28 @@
 #!/usr/bin/env bash
-# Smoke target: tier-1 tests + the fast memory/FD benchmarks.
-#   scripts/check.sh [extra pytest args...]
+# Smoke targets.
+#   scripts/check.sh [extra pytest args...]   full tier-1 + fast benchmarks
+#   scripts/check.sh fast [extra pytest args] unit tests minus the slow
+#                                             trainer/distributed suites
+# Both tiers run a compileall syntax gate first so breakage surfaces before
+# pytest collection.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "--- syntax gate (python -m compileall src) ---"
+python -m compileall -q src
+
+if [[ "${1:-}" == "fast" ]]; then
+  shift
+  # unit tier: drops the trainer/distributed suites plus the two
+  # multi-minute convergence sweeps (convex OCO regret, all-archs forward)
+  python -m pytest -x -q \
+    --ignore=tests/test_trainer.py \
+    --ignore=tests/test_distributed.py \
+    --ignore=tests/test_optim_convex.py \
+    --ignore=tests/test_models.py \
+    "$@"
+  exit 0
+fi
 
 python -m pytest -x -q "$@"
 

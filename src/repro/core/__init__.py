@@ -10,8 +10,10 @@ from repro.core.fd import FDState, fd_init, fd_update, fd_covariance, \
 from repro.core.api import (  # noqa: F401
     EngineConfig, InjectState, Preconditioner, PrecondState, StateMeta,
     Tagged, get_hyperparams, get_stage, inject_hyperparams, leaves_with_meta,
-    map_with_meta, named_chain, scale_by_preconditioner, second_moment_bytes,
-    set_hyperparams, tag, tag_like, untag)
+    map_with_meta, named_chain, pool_stats, scale_by_preconditioner,
+    second_moment_bytes, set_hyperparams, tag, tag_like, untag)
+from repro.core.pool import (  # noqa: F401
+    LeafPlan, PoolGroup, PoolIndex, build_index, group_key)
 from repro.core.sketchy import SketchyConfig, SketchyPreconditioner  # noqa: F401
 from repro.core.shampoo import ShampooConfig, ShampooPreconditioner  # noqa: F401
 from repro.core.adam import AdamConfig, AdamPreconditioner  # noqa: F401

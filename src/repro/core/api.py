@@ -12,8 +12,16 @@ statistics.  This module makes that framing first-class:
   * ``scale_by_preconditioner(precond, cfg)`` — the one shared engine.  It
     owns everything the per-optimizer monoliths used to duplicate: parameter
     blocking (paper §3.4), the diagonal fallback for vectors/scalars,
-    grafting (App. C), ``update_every`` / ``start_preconditioning_step``
-    gating, and the per-leaf loop.
+    grafting (App. C), and ``update_every`` / ``start_preconditioning_step``
+    gating.  Execution is *pooled* (core/pool.py): every matrix block in the
+    model is packed into one ``(N, bs_m, bs_n)`` stack per unique block
+    shape, and the three Preconditioner methods run once per shape group —
+    not once per parameter leaf — so a 400-leaf model compiles a handful of
+    kernel sets and the pooled blocks dim spans the whole model for mesh
+    sharding.  Refresh is either ``synchronized`` (all blocks on
+    ``count % update_every == 0``, the parity default) or ``staggered``
+    (per-block phase, ~N/update_every blocks per step — same amortized work
+    with no global eigh spike).
 
   * ``StateMeta`` / ``Tagged`` — every engine state leaf is wrapped in a
     ``Tagged`` pytree node carrying a static ``StateMeta`` (role, blocked
@@ -42,7 +50,7 @@ from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checka
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocking
+from repro.core import blocking, pool
 from repro.core.transform import GradientTransformation
 
 PyTree = Any
@@ -188,6 +196,9 @@ class Preconditioner(Protocol):
         ...
 
 
+REFRESH_SCHEDULES = ("synchronized", "staggered")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Everything the shared engine owns (formerly duplicated per optimizer)."""
@@ -197,21 +208,55 @@ class EngineConfig:
     start_preconditioning_step: int = 0
     graft: str = "rmsprop_normalized"   # rmsprop_normalized | rmsprop | none
     graft_eps: float = 1e-8
+    # Diagonal-fallback damping for vector/scalar leaves.  None keeps the
+    # historical coupling to graft_eps (bitwise parity with the seed).
+    diag_eps: Optional[float] = None
+    # synchronized: all blocks refresh on count % update_every == 0 (parity
+    # default).  staggered: one synchronized warm refresh at count 0, then
+    # block b refreshes when (count + b) % update_every == 0 — each block
+    # exactly once per window, ~N/update_every eighs every step instead of N
+    # on spike steps.
+    refresh_schedule: str = "synchronized"
     state_dtype: Any = jnp.float32
     # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
     # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
     # of the diagonal fallback.
     treat_vectors_as_columns: bool = False
 
+    def __post_init__(self):
+        if self.refresh_schedule not in REFRESH_SCHEDULES:
+            raise ValueError(
+                f"unknown refresh_schedule {self.refresh_schedule!r}; "
+                f"expected one of {REFRESH_SCHEDULES}")
+
 
 class LeafState(NamedTuple):
-    stats: Any          # implementation-defined, Tagged leaves
+    """Per-leaf residue that cannot be pooled: param-shaped diagonal stats
+    (diag fallback / diagonal preconditioners) and grafting accumulators.
+    Pooled matrix leaves carry ``stats=None`` — their block statistics live
+    in ``PrecondState.pools``."""
+    stats: Any          # implementation-defined, Tagged leaves, or None
     graft: Any          # Tagged grafting accumulator, or None
 
 
 class PrecondState(NamedTuple):
+    """Engine state: one packed stats stack per unique block shape (keyed by
+    ``pool.group_key``; leading dim spans every matrix block in the model)
+    plus the per-leaf residue."""
     count: Tagged
-    leaves: tuple
+    pools: dict         # group key -> stats pytree (Tagged, leading dim N)
+    leaves: tuple       # LeafState per flat param leaf
+
+
+def pool_stats(state: PrecondState, key: Optional[str] = None) -> Any:
+    """Untagged stats stack for one pool group (default: the only group)."""
+    if key is None:
+        if len(state.pools) != 1:
+            raise ValueError(
+                f"state has {len(state.pools)} pools {sorted(state.pools)}; "
+                "pass an explicit key")
+        key = next(iter(state.pools))
+    return untag(state.pools[key])
 
 
 def graft_direction(g: jnp.ndarray, acc: jnp.ndarray, *, graft: str,
@@ -240,109 +285,155 @@ def _index_unblocked(tree: PyTree, i: int) -> PyTree:
 def scale_by_preconditioner(precond: Preconditioner,
                             cfg: EngineConfig = EngineConfig()
                             ) -> GradientTransformation:
-    """The ONE shared direction engine (emits a descent direction, no lr)."""
+    """The ONE shared direction engine (emits a descent direction, no lr).
 
-    def leaf_info(shape) -> blocking.BlockInfo:
-        if (cfg.treat_vectors_as_columns and len(shape) == 1
-                and shape[0] >= 1):
-            mb, bs_m = blocking._tile(shape[0], cfg.block_size)
-            return blocking.BlockInfo(kind="matrix", shape=tuple(shape),
-                                      stack=1, m=shape[0], n=1, bs_m=bs_m,
-                                      bs_n=1, mb=mb, nb=1)
-        return blocking.analyze(tuple(shape), cfg.block_size)
+    Matrix blocks execute *pooled*: ``core/pool.py`` groups every block in
+    the model by block shape and the three Preconditioner methods run once
+    per shape group over a packed ``(N, bs_m, bs_n)`` stack.  Only the
+    per-leaf residue (diag fallback, grafting norms, gating) stays leafwise.
+    """
+    diag_eps = cfg.graft_eps if cfg.diag_eps is None else cfg.diag_eps
 
-    def init_leaf(p, i: int) -> LeafState:
-        info = leaf_info(p.shape)
-        if precond.diagonal:
-            stats = _index_unblocked(precond.init_block(
-                blocking.BlockInfo(kind="diag", shape=tuple(p.shape))), i)
-            return LeafState(stats=stats, graft=None)
-        if info.kind == "diag":
-            stats = tag(jnp.zeros(p.shape, cfg.state_dtype), "second_moment",
-                        param_index=i)
-            return LeafState(stats=stats, graft=None)
-        base = precond.init_block(info)
-        S = info.num_blocks
-        stats = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (S,) + x.shape), base)
-        graft = None
-        if cfg.graft != "none":
-            graft = tag(jnp.zeros(p.shape, cfg.state_dtype), "grafting",
-                        param_index=i)
-        return LeafState(stats=stats, graft=graft)
+    def index_of(shapes) -> pool.PoolIndex:
+        return pool.build_index(
+            tuple(tuple(s) for s in shapes), cfg.block_size,
+            vectors_as_columns=cfg.treat_vectors_as_columns)
 
     def init_fn(params):
-        leaves = tuple(init_leaf(p, i)
-                       for i, p in enumerate(jax.tree.leaves(params)))
-        return PrecondState(count=tag(jnp.zeros([], jnp.int32), "count"),
-                            leaves=leaves)
-
-    def update_leaf(g, leaf: LeafState, count):
-        g32 = g.astype(jnp.float32)
-        info = leaf_info(g.shape)
-
+        flat = jax.tree.leaves(params)
+        count = tag(jnp.zeros([], jnp.int32), "count")
         if precond.diagonal:
-            raw = untag(leaf.stats)
-            raw = precond.update_stats(raw, g32, count=count)
-            direction = precond.precondition(raw, g32, count=count)
-            return (direction.astype(g.dtype),
-                    LeafState(stats=tag_like(leaf.stats, raw), graft=None))
+            leaves = tuple(
+                LeafState(stats=_index_unblocked(precond.init_block(
+                    blocking.BlockInfo(kind="diag", shape=tuple(p.shape))), i),
+                    graft=None)
+                for i, p in enumerate(flat))
+            return PrecondState(count=count, pools={}, leaves=leaves)
 
-        if info.kind == "diag":
-            acc = cfg.beta2 * leaf.stats.value \
-                + (1.0 - cfg.beta2) * jnp.square(g32)
-            direction = g32 * jax.lax.rsqrt(acc + cfg.graft_eps)
-            return (direction.astype(g.dtype),
-                    LeafState(stats=Tagged(acc, leaf.stats.meta), graft=None))
+        index = index_of([p.shape for p in flat])
+        pools = {}
+        for grp in index.groups:
+            base = precond.init_block(grp.info)
+            pools[grp.key] = jax.tree.map(
+                lambda x, n=grp.num_blocks:
+                    jnp.broadcast_to(x, (n,) + x.shape), base)
+        leaves = []
+        for i, (p, plan) in enumerate(zip(flat, index.leaves)):
+            if plan.group is None:
+                leaves.append(LeafState(
+                    stats=tag(jnp.zeros(p.shape, cfg.state_dtype),
+                              "second_moment", param_index=i),
+                    graft=None))
+            else:
+                graft = None
+                if cfg.graft != "none":
+                    graft = tag(jnp.zeros(p.shape, cfg.state_dtype),
+                                "grafting", param_index=i)
+                leaves.append(LeafState(stats=None, graft=graft))
+        return PrecondState(count=count, pools=pools, leaves=tuple(leaves))
 
-        gb = blocking.to_blocks(g32, info)
-        raw = untag(leaf.stats)
-        raw = jax.vmap(
-            lambda s, G: precond.update_stats(s, G, count=count))(raw, gb)
-
-        def do_refresh(s):
-            return jax.vmap(
-                lambda ss, G: precond.refresh(ss, G, count=count))(s, gb)
-
+    def refresh_group(grp: pool.PoolGroup, raw, gb, count):
+        """Gated refresh over one packed stack (raw = untagged stats)."""
+        vrefresh = jax.vmap(lambda s, G: precond.refresh(s, G, count=count))
         if cfg.update_every <= 1:
-            raw = do_refresh(raw)
-        else:
-            raw = jax.lax.cond((count % cfg.update_every) == 0,
-                               do_refresh, lambda s: s, raw)
+            return vrefresh(raw, gb)
+        if cfg.refresh_schedule == "synchronized":
+            return jax.lax.cond((count % cfg.update_every) == 0,
+                                lambda s: vrefresh(s, gb), lambda s: s, raw)
+        # staggered: block b is due when (count + b) % update_every == 0 —
+        # at most ceil(N/k) blocks per step.  Gather the due blocks into a
+        # fixed-capacity sub-stack, refresh only those, scatter back.  Fill
+        # slots use the out-of-range index N: gathers clamp (the dummy
+        # refresh result is discarded) and scatters drop, so no valid block
+        # is ever clobbered.
+        N, k = grp.num_blocks, cfg.update_every
+        cap = -(-N // k)
 
-        pb = jax.vmap(
-            lambda s, G: precond.precondition(s, G, count=count))(raw, gb)
-        direction = blocking.from_blocks(pb, info)
+        def staggered(s):
+            due = (count + pool.block_ids(grp)) % k == 0
+            idx = jnp.nonzero(due, size=cap, fill_value=N)[0]
+            sub = vrefresh(jax.tree.map(lambda x: x[idx], s), gb[idx])
+            return jax.tree.map(lambda x, ns: x.at[idx].set(ns), s, sub)
 
-        if cfg.graft != "none":
-            graft_dir, new_acc = graft_direction(
-                g32, leaf.graft.value, graft=cfg.graft, beta2=cfg.beta2,
-                graft_eps=cfg.graft_eps)
-            pnorm = jnp.linalg.norm(direction)
-            gnorm = jnp.linalg.norm(graft_dir)
-            direction = direction * (gnorm / (pnorm + 1e-16))
-            new_graft = Tagged(new_acc, leaf.graft.meta)
-        else:
-            graft_dir = g32
-            new_graft = None
-
-        if cfg.start_preconditioning_step > 0:
-            use_precond = count >= cfg.start_preconditioning_step
-            direction = jnp.where(use_precond, direction, graft_dir)
-        return (direction.astype(g.dtype),
-                LeafState(stats=tag_like(leaf.stats, raw), graft=new_graft))
+        # Cold start: off-phase blocks must not precondition with their
+        # zero-initialized stats for up to k-1 steps, so count 0 does one
+        # synchronized warm refresh (exactly what the synchronized schedule's
+        # first step costs); phased refresh takes over from count 1.
+        return jax.lax.cond(count == 0, lambda s: vrefresh(s, gb),
+                            staggered, raw)
 
     def update_fn(updates, state, params=None):
         del params
         flat, treedef = jax.tree.flatten(updates)
         count = state.count.value
+        new_count = Tagged(count + 1, state.count.meta)
+
+        if precond.diagonal:
+            out, new_leaves = [], []
+            for g, leaf in zip(flat, state.leaves):
+                g32 = g.astype(jnp.float32)
+                raw = untag(leaf.stats)
+                raw = precond.update_stats(raw, g32, count=count)
+                direction = precond.precondition(raw, g32, count=count)
+                out.append(direction.astype(g.dtype))
+                new_leaves.append(LeafState(stats=tag_like(leaf.stats, raw),
+                                            graft=None))
+            return (jax.tree.unflatten(treedef, out),
+                    PrecondState(count=new_count, pools={},
+                                 leaves=tuple(new_leaves)))
+
+        index = index_of([g.shape for g in flat])
+        g32 = [g.astype(jnp.float32) for g in flat]
+        packed = pool.pack(index, g32)
+
+        # One update/refresh/precondition dispatch per SHAPE GROUP — the
+        # whole model's same-shaped blocks in one batched call each.
+        new_pools, pooled_dirs = {}, {}
+        for grp in index.groups:
+            gb = packed[grp.key]
+            raw = untag(state.pools[grp.key])
+            raw = jax.vmap(
+                lambda s, G: precond.update_stats(s, G, count=count))(raw, gb)
+            raw = refresh_group(grp, raw, gb, count)
+            pooled_dirs[grp.key] = jax.vmap(
+                lambda s, G: precond.precondition(s, G, count=count))(raw, gb)
+            new_pools[grp.key] = tag_like(state.pools[grp.key], raw)
+
+        # Per-leaf residue: diag fallback, grafting norms, gating.
         out, new_leaves = [], []
-        for g, leaf in zip(flat, state.leaves):
-            d, nl = update_leaf(g, leaf, count)
-            out.append(d)
-            new_leaves.append(nl)
+        for i, (g, leaf, plan) in enumerate(zip(flat, state.leaves,
+                                                index.leaves)):
+            gi = g32[i]
+            if plan.group is None:   # diagonal (RMSProp) fallback
+                acc = cfg.beta2 * leaf.stats.value \
+                    + (1.0 - cfg.beta2) * jnp.square(gi)
+                direction = gi * jax.lax.rsqrt(acc + diag_eps)
+                out.append(direction.astype(g.dtype))
+                new_leaves.append(LeafState(
+                    stats=Tagged(acc, leaf.stats.meta), graft=None))
+                continue
+
+            direction = pool.unpack_leaf(index, pooled_dirs, i)
+            if cfg.graft != "none":
+                graft_dir, new_acc = graft_direction(
+                    gi, leaf.graft.value, graft=cfg.graft, beta2=cfg.beta2,
+                    graft_eps=cfg.graft_eps)
+                pnorm = jnp.linalg.norm(direction)
+                gnorm = jnp.linalg.norm(graft_dir)
+                direction = direction * (gnorm / (pnorm + 1e-16))
+                new_graft = Tagged(new_acc, leaf.graft.meta)
+            else:
+                graft_dir = gi
+                new_graft = None
+
+            if cfg.start_preconditioning_step > 0:
+                use_precond = count >= cfg.start_preconditioning_step
+                direction = jnp.where(use_precond, direction, graft_dir)
+            out.append(direction.astype(g.dtype))
+            new_leaves.append(LeafState(stats=None, graft=new_graft))
+
         return (jax.tree.unflatten(treedef, out),
-                PrecondState(count=Tagged(count + 1, state.count.meta),
+                PrecondState(count=new_count, pools=new_pools,
                              leaves=tuple(new_leaves)))
 
     return GradientTransformation(init_fn, update_fn)

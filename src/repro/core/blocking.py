@@ -36,6 +36,11 @@ class BlockInfo:
     def num_blocks(self) -> int:
         return self.stack * self.mb * self.nb
 
+    @property
+    def block_shape(self) -> tuple:
+        """(bs_m, bs_n) — the pool-grouping key (core/pool.py)."""
+        return (self.bs_m, self.bs_n)
+
 
 def _tile(dim: int, block_size: int) -> tuple[int, int]:
     """(num_tiles, tile_size) with tile_size <= block_size; padded layout."""
@@ -54,6 +59,19 @@ def analyze(shape: tuple, block_size: int = 1024) -> BlockInfo:
     nb, bs_n = _tile(n, block_size)
     return BlockInfo(kind="matrix", shape=tuple(shape), stack=stack,
                      m=m, n=n, bs_m=bs_m, bs_n=bs_n, mb=mb, nb=nb)
+
+
+def analyze_leaf(shape: tuple, block_size: int = 1024, *,
+                 vectors_as_columns: bool = False) -> BlockInfo:
+    """``analyze`` plus the OCO convention: with ``vectors_as_columns`` a 1-D
+    leaf becomes a single (d, 1) matrix block (S-AdaGrad preconditions the
+    whole d-vector with one full sketch, Alg. 2) instead of the diagonal
+    fallback."""
+    if vectors_as_columns and len(shape) == 1 and shape[0] >= 1:
+        mb, bs_m = _tile(shape[0], block_size)
+        return BlockInfo(kind="matrix", shape=tuple(shape), stack=1,
+                         m=shape[0], n=1, bs_m=bs_m, bs_n=1, mb=mb, nb=1)
+    return analyze(tuple(shape), block_size)
 
 
 def to_blocks(x: jnp.ndarray, info: BlockInfo) -> jnp.ndarray:

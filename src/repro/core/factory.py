@@ -38,6 +38,13 @@ class OptimizerConfig:
     update_every: int = 10
     start_preconditioning_step: int = 0
     use_kernels: bool = False
+    # refresh phasing over the pooled block stacks (core/pool.py):
+    # synchronized reproduces the seed exactly; staggered spreads the eigh
+    # cost uniformly (one 1/update_every slice of blocks per step).
+    refresh_schedule: str = "synchronized"
+    # diagonal-fallback damping for vector/scalar leaves; None keeps the
+    # historical graft_eps coupling (seed parity).
+    diag_eps: Optional[float] = None
 
 
 def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
@@ -46,12 +53,14 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             rank=cfg.rank, block_size=cfg.block_size, beta2=beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
+            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
             use_kernels=cfg.use_kernels))
     if cfg.name == "shampoo":
         return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
             block_size=cfg.block_size, beta2=beta2,
             root_every=cfg.update_every,
-            start_preconditioning_step=cfg.start_preconditioning_step))
+            start_preconditioning_step=cfg.start_preconditioning_step,
+            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps))
     if cfg.name == "adam":
         return adam_lib.adam(adam_lib.AdamConfig(
             beta1=cfg.beta1, beta2=beta2))

@@ -1,0 +1,147 @@
+"""Packed block-pool layout: shape-grouped cross-parameter block stacks.
+
+The engine (core/api.py) used to dispatch ``update_stats/refresh/
+precondition`` once **per parameter leaf**, compiling a separate vmap'd
+kernel set for every leaf even though a transformer has hundreds of leaves
+sharing a handful of block shapes.  This module groups *every* matrix block
+in the model by its padded block shape ``(bs_m, bs_n)`` into one packed
+``(N, bs_m, bs_n)`` stack per unique shape, so the engine runs each
+Preconditioner method once per *shape group* — a 400-leaf model compiles
+~3-5 kernel sets instead of ~400, and the pooled leading dim ``N`` spans the
+whole model, which is what lets ``trainer.train_state_shardings`` shard FD
+refresh over the full ``('model', 'data')`` mesh (the ``opt_blocks`` logical
+axis, sharding/rules.py).
+
+Everything here is static Python over shapes: ``build_index`` is computed
+from the parameter treedef once (LRU-cached), ``pack``/``unpack`` are pure
+reshapes/concats under jit.  Block order within a group is canonical —
+parameter leaves in flat-tree order, then row-major tile order within each
+leaf (blocking.to_blocks) — so checkpoints and shardings are reproducible
+from shapes alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import blocking
+
+
+def group_key(bs_m: int, bs_n: int) -> str:
+    """Canonical pool-dict key for a block shape (stable checkpoint paths)."""
+    return f"{bs_m}x{bs_n}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolGroup:
+    """One packed stack: all model blocks of one ``(bs_m, bs_n)`` shape."""
+    key: str
+    bs_m: int
+    bs_n: int
+    num_blocks: int          # N — total blocks across all member leaves
+    leaf_ids: tuple          # flat param indices contributing, in pack order
+
+    @property
+    def info(self) -> blocking.BlockInfo:
+        """Representative BlockInfo for ``Preconditioner.init_block`` (only
+        the block dims are meaningful at the group level)."""
+        return blocking.BlockInfo(kind="matrix", shape=(self.bs_m, self.bs_n),
+                                  stack=1, m=self.bs_m, n=self.bs_n,
+                                  bs_m=self.bs_m, bs_n=self.bs_n, mb=1, nb=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Where one parameter leaf's blocks live."""
+    info: blocking.BlockInfo
+    group: Optional[int] = None   # index into PoolIndex.groups ('matrix')
+    offset: int = 0               # block offset within the group stack
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolIndex:
+    """Static scatter/gather map between the param tree and the pools."""
+    groups: tuple          # tuple[PoolGroup]
+    leaves: tuple          # tuple[LeafPlan], one per flat param leaf
+
+    @property
+    def total_blocks(self) -> int:
+        return sum(g.num_blocks for g in self.groups)
+
+
+@functools.lru_cache(maxsize=None)
+def build_index(shapes: tuple, block_size: int = 1024, *,
+                vectors_as_columns: bool = False) -> PoolIndex:
+    """Group every matrix leaf's blocks by block shape.
+
+    ``shapes`` is the tuple of flat parameter shapes (hashable => cached per
+    model).  Leaves that analyze to 'diag' get a plan with ``group=None`` and
+    stay on the engine's per-leaf diagonal path.
+    """
+    members: dict = {}               # key -> list[(leaf_id, num_blocks)]
+    infos = [blocking.analyze_leaf(tuple(s), block_size,
+                                   vectors_as_columns=vectors_as_columns)
+             for s in shapes]
+    for i, info in enumerate(infos):
+        if info.kind != "matrix":
+            continue
+        members.setdefault(group_key(info.bs_m, info.bs_n), []).append(
+            (i, info.num_blocks))
+
+    groups, plans = [], [None] * len(infos)
+    for gi, key in enumerate(sorted(members)):  # sorted: match dict-pytree order
+        offset = 0
+        leaf_ids = []
+        for i, nb in members[key]:
+            plans[i] = LeafPlan(info=infos[i], group=gi, offset=offset)
+            offset += nb
+            leaf_ids.append(i)
+        bs_m, bs_n = infos[leaf_ids[0]].block_shape
+        groups.append(PoolGroup(key=key, bs_m=bs_m, bs_n=bs_n,
+                                num_blocks=offset, leaf_ids=tuple(leaf_ids)))
+    for i, info in enumerate(infos):
+        if plans[i] is None:
+            plans[i] = LeafPlan(info=info)
+    return PoolIndex(groups=tuple(groups), leaves=tuple(plans))
+
+
+def pack(index: PoolIndex, flat_leaves) -> dict:
+    """Flat (f32) gradient leaves -> {group key: (N, bs_m, bs_n) stack}.
+
+    Blocks are concatenated in canonical order (leaf order, then tile order),
+    matching ``LeafPlan.offset``.
+    """
+    per_group: dict = {g.key: [] for g in index.groups}
+    for leaf, plan in zip(flat_leaves, index.leaves):
+        if plan.group is None:
+            continue
+        per_group[index.groups[plan.group].key].append(
+            blocking.to_blocks(leaf, plan.info))
+    return {key: (blocks[0] if len(blocks) == 1
+                  else jnp.concatenate(blocks, axis=0))
+            for key, blocks in per_group.items()}
+
+
+def unpack_leaf(index: PoolIndex, pools: dict, leaf_id: int) -> jnp.ndarray:
+    """Slice one leaf's blocks out of its pool and restore the leaf shape."""
+    plan = index.leaves[leaf_id]
+    assert plan.group is not None, f"leaf {leaf_id} is not pooled"
+    stack = pools[index.groups[plan.group].key]
+    blocks = stack[plan.offset:plan.offset + plan.info.num_blocks]
+    return blocking.from_blocks(blocks, plan.info)
+
+
+def unpack(index: PoolIndex, pools: dict) -> list:
+    """{group key: (N, bs_m, bs_n)} -> flat list of leaf arrays (``None`` at
+    non-pooled positions)."""
+    return [unpack_leaf(index, pools, i) if plan.group is not None else None
+            for i, plan in enumerate(index.leaves)]
+
+
+def block_ids(group: PoolGroup) -> jnp.ndarray:
+    """Global block positions within a group stack — the staggered-refresh
+    phase source (core/api.py)."""
+    return jnp.arange(group.num_blocks, dtype=jnp.int32)

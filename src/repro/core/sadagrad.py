@@ -71,7 +71,7 @@ class SAdaGradState(NamedTuple):
     @property
     def sketch(self) -> FDState:
         """The (d, ell) FD sketch, unbatched (analysis/back-compat)."""
-        raw = api.untag(self.opt.leaves[0].stats)
+        raw = api.pool_stats(self.opt)   # single (d, 1) group for a d-vector
         return jax.tree.map(lambda x: x[0], raw)
 
 

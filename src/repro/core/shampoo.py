@@ -11,7 +11,7 @@ live in the engine (core/api.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, NamedTuple
+from typing import Any, ClassVar, NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -27,7 +27,9 @@ class ShampooConfig:
     start_preconditioning_step: int = 0
     matrix_eps: float = 1e-6
     graft_eps: float = 1e-8
+    diag_eps: Optional[float] = None    # diag-fallback damping (None => graft_eps)
     graft: str = "rmsprop_normalized"
+    refresh_schedule: str = "synchronized"  # synchronized | staggered
     state_dtype: Any = jnp.float32
 
 
@@ -92,7 +94,8 @@ def shampoo(cfg: ShampooConfig = ShampooConfig()) -> GradientTransformation:
             block_size=cfg.block_size, beta2=cfg.beta2,
             update_every=cfg.root_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
-            graft=cfg.graft, graft_eps=cfg.graft_eps,
+            graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
+            refresh_schedule=cfg.refresh_schedule,
             state_dtype=cfg.state_dtype))
 
 

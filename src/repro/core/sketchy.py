@@ -38,7 +38,9 @@ class SketchyConfig:
     start_preconditioning_step: int = 0   # paper App. C uses 101 at scale
     matrix_eps: float = 1e-6
     graft_eps: float = 1e-8
+    diag_eps: Optional[float] = None      # diag-fallback damping (None => graft_eps)
     graft: str = "rmsprop_normalized"     # rmsprop_normalized | rmsprop | none
+    refresh_schedule: str = "synchronized"  # synchronized | staggered
     exponent: float = -0.25         # per-side inverse root (Alg. 3)
     state_dtype: Any = jnp.float32
     use_kernels: bool = False       # route matmuls through Pallas ops
@@ -109,7 +111,8 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
             block_size=cfg.block_size, beta2=cfg.beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
-            graft=cfg.graft, graft_eps=cfg.graft_eps,
+            graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
+            refresh_schedule=cfg.refresh_schedule,
             state_dtype=cfg.state_dtype))
 
 

@@ -191,3 +191,25 @@ def tree_param_shardings(params, rules: MeshRules):
         lambda s, leaf: enforce_divisible(NamedSharding(rules.mesh, s),
                                           leaf.shape),
         specs, params, is_leaf=lambda x: isinstance(x, P))
+
+
+def blocks_sharding(rules: MeshRules, leaf) -> NamedSharding:
+    """Sharding for a pooled optimizer-state stack (core/pool.py): leading
+    blocks dim over the model-major ``opt_blocks`` tiling (when divisible;
+    falls back to data-only fsdp, then replicated).
+
+    The pooled leading dim spans every same-shaped block in the model — not
+    one parameter's tiles — so with shape-grouped pools the ('model', 'data')
+    product almost always divides it and FD refresh shards over the whole
+    mesh.  Model-major matches the expert-major flattening of EP-sharded
+    parameters, keeping the grad->block re-layout local (EXPERIMENTS.md
+    §Perf, kimi iteration 3)."""
+    ndim = leaf.ndim
+    if not ndim:
+        return NamedSharding(rules.mesh, P())
+    for axis in ("opt_blocks", "fsdp"):
+        spec = rules.spec(*([axis] + [None] * (ndim - 1)))
+        sh = enforce_divisible(NamedSharding(rules.mesh, spec), leaf.shape)
+        if sh.spec[0] is not None:
+            return sh
+    return NamedSharding(rules.mesh, P(*([None] * ndim)))

@@ -16,11 +16,20 @@ role/blocked annotation of its ``Tagged`` wrapper (null for plain leaves),
 and restore cross-checks recorded roles against the template's metadata —
 a structural mismatch between optimizer variants fails loudly instead of
 silently loading a momentum buffer into a second-moment slot.
+
+Format migration: checkpoints written before the block-pool engine
+(core/pool.py) stored per-leaf block stacks at
+``...::leaves::<j>::stats::<...>``; the pooled layout packs those stacks
+into shape-grouped pools at ``...::pools::<bs_m>x<bs_n>::<...>``.
+``restore`` detects the old layout and re-packs it on the fly (leaf order ==
+pool pack order, so migration is pure concatenation) — no re-warmup of
+second-moment state on upgrade.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Optional
@@ -111,6 +120,106 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+_PRE_POOL_STATS = re.compile(r"^(.*)\.leaves::(\d+)::\.stats::(.+)$")
+_POOL_LEAF = re.compile(r"^(.*)\.pools::(\d+x\d+)::(.+)$")
+
+
+def _migrate_pre_pool(path: str, manifest: dict, named: list,
+                      metas: list) -> Optional[list]:
+    """Re-pack a pre-pool (per-leaf engine) checkpoint into the pooled
+    template layout.  Returns np arrays aligned with the template flatten
+    order, or None when the manifest is not the old layout.
+
+    Old blocked stacks live at ``<prefix>leaves::<j>::stats::<suffix>``; the
+    pooled template wants ``<prefix>pools::<KEY>::<suffix>`` whose leading
+    dim concatenates the member leaves' stacks in leaf order — exactly the
+    canonical pack order of core/pool.py.  Leaf->group membership is
+    recovered structurally: leaf j belongs to the (unique) group whose
+    per-block stat shapes match on every suffix.
+    """
+    recs = {r["name"]: r for r in manifest["leaves"]}
+    pool_targets = [(i, _POOL_LEAF.match(name))
+                    for i, (name, _) in enumerate(named)]
+    pool_targets = [(i, m) for i, m in pool_targets if m]
+    has_old = any(_PRE_POOL_STATS.match(r["name"])
+                  and (r.get("meta") or {}).get("blocked")
+                  for r in manifest["leaves"])
+    if not pool_targets or not has_old:
+        return None
+
+    # prefix -> leaf j -> {suffix: record}; only blocked (block-stack) stats.
+    old: dict = {}
+    for r in manifest["leaves"]:
+        m = _PRE_POOL_STATS.match(r["name"])
+        if not m or not (r.get("meta") or {}).get("blocked"):
+            continue
+        prefix, j, suffix = m.group(1), int(m.group(2)), m.group(3)
+        old.setdefault(prefix, {}).setdefault(j, {})[suffix] = r
+
+    # prefix -> KEY -> {suffix: (template index, shape)}
+    want: dict = {}
+    for i, m in pool_targets:
+        prefix, key, suffix = m.group(1), m.group(2), m.group(3)
+        want.setdefault(prefix, {}).setdefault(key, {})[suffix] = \
+            (i, tuple(named[i][1].shape))
+
+    out: dict = {}          # template index -> np array
+    consumed: set = set()   # old record names folded into pools
+    for prefix, groups in want.items():
+        members = old.get(prefix, {})
+        assign: dict = {key: [] for key in groups}
+        for j in sorted(members):
+            matches = [key for key, suffixes in groups.items()
+                       if set(suffixes) == set(members[j]) and all(
+                           tuple(members[j][sfx]["shape"])[1:] == shp[1:]
+                           for sfx, (_, shp) in suffixes.items())]
+            if len(matches) != 1:
+                raise ValueError(
+                    f"pre-pool migration: leaf {prefix}leaves::{j} matches "
+                    f"{len(matches)} shape groups — cannot regroup")
+            assign[matches[0]].append(j)
+        for key, leaf_ids in assign.items():
+            for sfx, (i, shp) in groups[key].items():
+                parts = [np.load(os.path.join(path,
+                                              members[j][sfx]["file"]))
+                         for j in leaf_ids]
+                consumed.update(members[j][sfx]["name"] for j in leaf_ids)
+                arr = parts[0] if len(parts) == 1 \
+                    else np.concatenate(parts, axis=0)
+                if tuple(arr.shape) != shp:
+                    raise ValueError(
+                        f"pre-pool migration: pool {prefix}pools::{key}::"
+                        f"{sfx} expects {shp}, regrouped stacks give "
+                        f"{tuple(arr.shape)}")
+                out[i] = arr
+
+    pooled_idx = {i for i, _ in pool_targets}
+    leaves = []
+    for i, ((name, tmpl), meta) in enumerate(zip(named, metas)):
+        if i in pooled_idx:
+            leaves.append(out[i])
+            continue
+        rec = recs.get(name)
+        if rec is None:
+            raise ValueError(
+                f"pre-pool migration: template leaf {name!r} missing from "
+                "checkpoint")
+        rec_meta = rec.get("meta")
+        if meta is not None and rec_meta is not None \
+                and rec_meta["role"] != meta["role"]:
+            raise ValueError(
+                f"state-role mismatch at {name}: checkpoint has "
+                f"{rec_meta['role']!r}, template expects {meta['role']!r}")
+        consumed.add(name)
+        leaves.append(np.load(os.path.join(path, rec["file"])))
+    leftover = set(recs) - consumed
+    if leftover:
+        raise ValueError(
+            f"pre-pool migration: {len(leftover)} checkpoint leaves were not "
+            f"consumed (e.g. {sorted(leftover)[:3]}) — incompatible states")
+    return leaves
+
+
 def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
             shardings: Optional[PyTree] = None) -> tuple[PyTree, int, dict]:
     """Load into the structure of ``template``; reshard onto ``shardings``
@@ -124,6 +233,18 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
 
     named, treedef = _flatten_with_names(template)
     metas = _meta_records(template)
+    if [n for n, _ in named] != [r["name"] for r in manifest["leaves"]]:
+        migrated = _migrate_pre_pool(path, manifest, named, metas)
+        if migrated is not None:
+            sh_flat = (jax.tree.leaves(
+                shardings,
+                is_leaf=lambda x: hasattr(x, "addressable_devices"))
+                if shardings is not None else [None] * len(named))
+            leaves = [jax.device_put(a, sh) if sh is not None
+                      else jax.numpy.asarray(a)
+                      for a, sh in zip(migrated, sh_flat)]
+            return (jax.tree_util.tree_unflatten(treedef, leaves), step,
+                    manifest.get("extra", {}))
     if len(named) != len(manifest["leaves"]):
         raise ValueError(
             f"checkpoint has {len(manifest['leaves'])} leaves, template has "

@@ -7,10 +7,13 @@ model), optional microbatched gradient accumulation, optimizer update.
 ``train_state_shardings`` assigns NamedShardings to every optimizer-state
 leaf by walking the ``StateMeta`` annotations (core/api.py): param-shaped
 leaves (momentum, grafting, diag accumulators) inherit the owning
-parameter's sharding via ``meta.param_index``; blocked leaves (Sketchy FD
-sketches, Shampoo factors) shard their leading blocks dim over the
-model-major axes; counts/hyperparams replicate.  No optimizer-specific
-types appear here — a new Preconditioner shards correctly for free.
+parameter's sharding via ``meta.param_index``; blocked leaves are the packed
+shape-group pools (core/pool.py) whose leading dim spans every same-shaped
+block in the model — they shard that dim over the model-major ``opt_blocks``
+axes (sharding/rules.py), so FD refresh runs data-parallel over the whole
+('model', 'data') mesh.  Counts/hyperparams replicate.  No
+optimizer-specific types appear here — a new Preconditioner shards
+correctly for free.
 """
 from __future__ import annotations
 
@@ -84,23 +87,6 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
 # Sharding assignment for optimizer state
 
 
-def _blocks_sharding(rules: rules_lib.MeshRules, leaf) -> NamedSharding:
-    """Leading blocks dim over model-major (model, data) tiling (when
-    divisible; falls back to data-only, then replicated). Model-major matches
-    the expert-major flattening of EP-sharded parameters, keeping the
-    grad->block re-layout local."""
-    ndim = leaf.ndim
-    if not ndim:
-        return NamedSharding(rules.mesh, P())
-    for axis in ("opt_blocks", "fsdp"):
-        spec = rules.spec(*([axis] + [None] * (ndim - 1)))
-        sh = rules_lib.enforce_divisible(NamedSharding(rules.mesh, spec),
-                                         leaf.shape)
-        if sh.spec[0] is not None:
-            return sh
-    return NamedSharding(rules.mesh, P(*([None] * ndim)))
-
-
 def train_state_shardings(opt_state: PyTree, params: PyTree,
                           rules: rules_lib.MeshRules) -> PyTree:
     """NamedShardings for an optimizer-state pytree (works on structs).
@@ -119,7 +105,7 @@ def train_state_shardings(opt_state: PyTree, params: PyTree,
         if meta.param_index is not None and meta.shard in ("auto", "param"):
             return flat_param_sh[meta.param_index]
         if meta.blocked or meta.shard == "blocks":
-            return _blocks_sharding(rules, leaf)
+            return rules_lib.blocks_sharding(rules, leaf)
         return repl
 
     return api.map_with_meta(assign, opt_state)

@@ -1,8 +1,11 @@
-"""Frozen copies of the SEED (pre-unification) optimizer monoliths.
+"""Frozen copies of the SEED (pre-unification) optimizer monoliths, plus the
+PR-1 PER-LEAF engine (pre-pool).
 
 Test fixture only: the parity tests in test_preconditioner_api.py assert the
 new ``scale_by_preconditioner``-based sketchy/shampoo/adam produce
-numerically identical updates to these originals.  Do not import from
+numerically identical updates to these originals, and test_pool.py pins the
+pooled engine *bitwise* to ``per_leaf_scale_by_preconditioner`` (the PR-1
+engine that dispatched once per parameter leaf).  Do not import from
 production code.
 """
 from __future__ import annotations
@@ -270,5 +273,110 @@ def seed_adam(cfg: AdamConfig = AdamConfig()) -> GradientTransformation:
                              ).astype(g.dtype),
             mu, nu, updates)
         return out, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ----------------------------------------------------- PR-1 per-leaf engine
+# Frozen copy of core/api.scale_by_preconditioner BEFORE the block-pool
+# rebase: one vmapped update/refresh/precondition dispatch per parameter
+# leaf.  Tags are stripped (state leaves are raw arrays) — the pooled engine
+# must be bitwise-identical to this on directions and statistics under
+# refresh_schedule="synchronized".
+
+class PerLeafState(NamedTuple):
+    count: jnp.ndarray
+    leaves: tuple
+
+
+class PerLeafLeaf(NamedTuple):
+    stats: object
+    graft: object
+
+
+def per_leaf_scale_by_preconditioner(precond, cfg) -> GradientTransformation:
+    """cfg is an api.EngineConfig; precond a production Preconditioner."""
+    from repro.core import api
+
+    def leaf_info(shape):
+        return blocking.analyze_leaf(
+            tuple(shape), cfg.block_size,
+            vectors_as_columns=cfg.treat_vectors_as_columns)
+
+    def init_leaf(p):
+        info = leaf_info(p.shape)
+        if info.kind == "diag":
+            return PerLeafLeaf(stats=jnp.zeros(p.shape, cfg.state_dtype),
+                               graft=None)
+        base = api.untag(precond.init_block(info))
+        S = info.num_blocks
+        stats = jax.tree.map(lambda x: jnp.broadcast_to(x, (S,) + x.shape),
+                             base)
+        graft = (jnp.zeros(p.shape, cfg.state_dtype)
+                 if cfg.graft != "none" else None)
+        return PerLeafLeaf(stats=stats, graft=graft)
+
+    def init_fn(params):
+        return PerLeafState(
+            count=jnp.zeros([], jnp.int32),
+            leaves=tuple(init_leaf(p) for p in jax.tree.leaves(params)))
+
+    def update_leaf(g, leaf, count):
+        g32 = g.astype(jnp.float32)
+        info = leaf_info(g.shape)
+
+        if info.kind == "diag":
+            acc = cfg.beta2 * leaf.stats + (1.0 - cfg.beta2) * jnp.square(g32)
+            direction = g32 * jax.lax.rsqrt(acc + cfg.graft_eps)
+            return (direction.astype(g.dtype),
+                    PerLeafLeaf(stats=acc, graft=None))
+
+        gb = blocking.to_blocks(g32, info)
+        raw = jax.vmap(
+            lambda s, G: precond.update_stats(s, G, count=count))(leaf.stats,
+                                                                  gb)
+
+        def do_refresh(s):
+            return jax.vmap(
+                lambda ss, G: precond.refresh(ss, G, count=count))(s, gb)
+
+        if cfg.update_every <= 1:
+            raw = do_refresh(raw)
+        else:
+            raw = jax.lax.cond((count % cfg.update_every) == 0,
+                               do_refresh, lambda s: s, raw)
+
+        pb = jax.vmap(
+            lambda s, G: precond.precondition(s, G, count=count))(raw, gb)
+        direction = blocking.from_blocks(pb, info)
+
+        if cfg.graft != "none":
+            graft_dir, new_acc = api.graft_direction(
+                g32, leaf.graft, graft=cfg.graft, beta2=cfg.beta2,
+                graft_eps=cfg.graft_eps)
+            pnorm = jnp.linalg.norm(direction)
+            gnorm = jnp.linalg.norm(graft_dir)
+            direction = direction * (gnorm / (pnorm + 1e-16))
+        else:
+            graft_dir = g32
+            new_acc = None
+
+        if cfg.start_preconditioning_step > 0:
+            use_precond = count >= cfg.start_preconditioning_step
+            direction = jnp.where(use_precond, direction, graft_dir)
+        return (direction.astype(g.dtype),
+                PerLeafLeaf(stats=raw, graft=new_acc))
+
+    def update_fn(updates, state, params=None):
+        del params
+        flat, treedef = jax.tree.flatten(updates)
+        out, new_leaves = [], []
+        for g, leaf in zip(flat, state.leaves):
+            d, nl = update_leaf(g, leaf, state.count)
+            out.append(d)
+            new_leaves.append(nl)
+        return (jax.tree.unflatten(treedef, out),
+                PerLeafState(count=state.count + 1,
+                             leaves=tuple(new_leaves)))
 
     return GradientTransformation(init_fn, update_fn)

@@ -1,0 +1,343 @@
+"""Block-pool engine: pack/unpack round-trip properties, bitwise parity with
+the PR-1 per-leaf engine (synchronized refresh), staggered-refresh window
+coverage, and the pre-pool checkpoint migration shim."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
+
+import reference_impls as ref
+from repro.core import api, blocking, pool
+from repro.core.sadagrad import SAdaGradPreconditioner, sadagrad_init, \
+    sadagrad_step
+from repro.core.shampoo import ShampooConfig, ShampooPreconditioner
+from repro.core.sketchy import SketchyConfig, SketchyPreconditioner, sketchy
+
+
+def _params(seed=0):
+    """Matrix, vector, >2D stack (scan/MoE), padded-tile, and shape-duplicate
+    leaves — every packing case at once."""
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    return {"m": mk(48, 20), "v": mk(10), "t": mk(3, 40, 24), "b": mk(70, 30),
+            "m2": mk(48, 20)}
+
+
+def _grad(seed):
+    return _params(seed + 100)
+
+
+# ---------------------------------------------------------------- pack/unpack
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 70), min_size=2, max_size=8),
+    lead=st.lists(st.integers(1, 3), min_size=0, max_size=2),
+    bs=st.sampled_from([8, 16, 32]),
+)
+def test_pack_unpack_roundtrip(dims, lead, bs):
+    """unpack(pack(leaves)) == leaves exactly, for arbitrary mixed trees
+    (padded tiles, stacked/MoE leading dims, vectors, duplicates)."""
+    rng = np.random.default_rng(0)
+    shapes = []
+    for i in range(0, len(dims) - 1, 2):
+        shape = (dims[i], dims[i + 1])
+        if lead and i % 4 == 0:       # give some leaves stacked leading dims
+            shape = tuple(lead) + shape
+        shapes.append(shape)
+    shapes.append((dims[0],))         # always include a vector (diag) leaf
+    leaves = [jnp.asarray(rng.normal(size=s), jnp.float32) for s in shapes]
+
+    index = pool.build_index(tuple(shapes), bs)
+    packed = pool.pack(index, leaves)
+
+    # group invariants: stack shapes, contiguous offsets, full coverage
+    total = 0
+    for gi, grp in enumerate(index.groups):
+        assert packed[grp.key].shape == (grp.num_blocks, grp.bs_m, grp.bs_n)
+        offset = 0
+        for j in grp.leaf_ids:
+            plan = index.leaves[j]
+            assert plan.group == gi and plan.offset == offset
+            offset += plan.info.num_blocks
+        assert offset == grp.num_blocks
+        total += grp.num_blocks
+    assert total == index.total_blocks
+    assert total == sum(p.info.num_blocks for p in index.leaves
+                        if p.group is not None)
+
+    out = pool.unpack(index, packed)
+    for x, back, plan in zip(leaves, out, index.leaves):
+        if plan.group is None:
+            assert back is None and plan.info.kind == "diag"
+        else:
+            np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_group_key_collation_matches_dict_pytree_order():
+    """Pool dict keys are sorted at build time so the PoolIndex group order
+    matches jax's sorted-dict flatten order (checkpoint/sharding alignment)."""
+    shapes = ((48, 20), (70, 30), (3, 40, 24), (48, 20))
+    index = pool.build_index(shapes, 32)
+    keys = [g.key for g in index.groups]
+    assert keys == sorted(keys)
+    assert keys == [pool.group_key(g.bs_m, g.bs_n) for g in index.groups]
+
+
+def test_build_index_is_cached():
+    a = pool.build_index(((48, 20), (10,)), 32)
+    b = pool.build_index(((48, 20), (10,)), 32)
+    assert a is b
+
+
+# ------------------------------------------------------------- bitwise parity
+
+
+def _parity_case(name):
+    if name == "sketchy":
+        cfg = SketchyConfig(rank=8, block_size=32, beta2=0.99, update_every=2,
+                            start_preconditioning_step=2)
+        precond = SketchyPreconditioner(cfg)
+        ecfg = api.EngineConfig(block_size=32, beta2=0.99, update_every=2,
+                                start_preconditioning_step=2)
+    elif name == "shampoo":
+        cfg = ShampooConfig(block_size=32, beta2=0.99, root_every=2)
+        precond = ShampooPreconditioner(cfg)
+        ecfg = api.EngineConfig(block_size=32, beta2=0.99, update_every=2)
+    else:  # sadagrad
+        precond = SAdaGradPreconditioner(8)
+        ecfg = api.EngineConfig(block_size=1 << 30, beta2=1.0, update_every=1,
+                                graft="none", treat_vectors_as_columns=True)
+    return precond, ecfg
+
+
+@pytest.mark.parametrize("name", ["sketchy", "shampoo", "sadagrad"])
+def test_pooled_engine_bitwise_matches_per_leaf(name):
+    """Acceptance criterion: under refresh_schedule="synchronized" the pooled
+    engine is BITWISE identical (directions and statistics) to the PR-1
+    per-leaf engine it replaces."""
+    precond, ecfg = _parity_case(name)
+    params = _params() if name != "sadagrad" else \
+        {"x": jnp.asarray(np.random.default_rng(0).normal(size=32),
+                          jnp.float32)}
+    new_tx = api.scale_by_preconditioner(precond, ecfg)
+    old_tx = ref.per_leaf_scale_by_preconditioner(precond, ecfg)
+    s_new, s_old = new_tx.init(params), old_tx.init(params)
+    for t in range(6):
+        g = jax.tree.map(
+            lambda p: jnp.asarray(
+                np.random.default_rng(t).normal(size=p.shape), jnp.float32),
+            params)
+        u_new, s_new = new_tx.update(g, s_new, params)
+        u_old, s_old = old_tx.update(g, s_old, params)
+        for a, b in zip(jax.tree.leaves(u_new), jax.tree.leaves(u_old)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # statistics too: re-slice each leaf's block stack out of its pool
+    index = pool.build_index(
+        tuple(tuple(p.shape) for p in jax.tree.leaves(params)),
+        ecfg.block_size, vectors_as_columns=ecfg.treat_vectors_as_columns)
+    for j, (plan, old_leaf) in enumerate(zip(index.leaves, s_old.leaves)):
+        if plan.group is None:
+            np.testing.assert_array_equal(
+                np.asarray(s_new.leaves[j].stats.value),
+                np.asarray(old_leaf.stats))
+            continue
+        key = index.groups[plan.group].key
+        sliced = jax.tree.map(
+            lambda x: x[plan.offset:plan.offset + plan.info.num_blocks],
+            api.untag(s_new.pools[key]))
+        for a, b in zip(jax.tree.leaves(sliced),
+                        jax.tree.leaves(old_leaf.stats)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pool_state_compiles_once_per_shape_group():
+    """The tentpole: >=100 same-shaped leaves produce ONE pool group (one
+    kernel set), not one per leaf — and the update still runs under jit."""
+    rng = np.random.default_rng(0)
+    params = {f"w{i:03d}": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+              for i in range(100)}
+    tx = sketchy(SketchyConfig(rank=4, block_size=16, update_every=2))
+    state = tx.init(params)
+    assert list(state.pools) == ["16x16"]
+    (stats_leaf, *_) = jax.tree.leaves(api.pool_stats(state))
+    assert stats_leaf.shape[0] == 100   # pooled dim spans the whole model
+    g = {k: jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+         for k in params}
+    u, state = jax.jit(tx.update)(g, state)
+    assert not any(bool(jnp.isnan(x).any()) for x in jax.tree.leaves(u))
+
+
+# ---------------------------------------------------------- staggered refresh
+
+
+def test_staggered_refreshes_each_block_once_per_window():
+    """After the count-0 warm refresh, every block refreshes exactly once per
+    update_every window and no step refreshes more than ceil(N/k) blocks
+    (no global eigh spike in steady state)."""
+    k = 3
+    params = _params()
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, beta2=0.99,
+                               update_every=k, refresh_schedule="staggered"))
+    state = tx.init(params)
+    # count 0: cold-start warm refresh touches EVERY block (same cost as the
+    # synchronized schedule's first step) so no block preconditions with
+    # zero-initialized stats
+    u, state = tx.update(_grad(99), state, params)
+    prev = {key: np.asarray(jax.tree.leaves(api.untag(v))[1])  # eigvals
+            for key, v in state.pools.items()}
+    for key, p in prev.items():
+        assert not np.allclose(p, 0.0)   # warm refresh happened
+    refresh_counts = {key: np.zeros(p.shape[0], np.int64)
+                      for key, p in prev.items()}
+    per_step_max = 0
+    steps = 3 * k
+    for t in range(steps):
+        g = _grad(t)
+        u, state = tx.update(g, state, params)
+        changed_this_step = 0
+        for key, v in state.pools.items():
+            cur = np.asarray(jax.tree.leaves(api.untag(v))[1])
+            changed = ~np.all(np.isclose(cur, prev[key]), axis=1)
+            refresh_counts[key] += changed
+            changed_this_step += int(changed.sum())
+            prev[key] = cur
+        per_step_max = max(per_step_max, changed_this_step)
+    total_blocks = sum(len(c) for c in refresh_counts.values())
+    # exactly once per window for every block, spike bounded by sum of
+    # per-group capacities ceil(N/k)
+    for key, counts in refresh_counts.items():
+        np.testing.assert_array_equal(counts, steps // k)
+    cap = sum(-(-len(c) // k) for c in refresh_counts.values())
+    assert per_step_max <= cap < total_blocks
+
+
+def test_synchronized_default_spikes_on_boundary():
+    """Parity default: all blocks refresh together on count % k == 0."""
+    k = 3
+    params = _params()
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, beta2=0.99,
+                               update_every=k))
+    state = tx.init(params)
+    prev = None
+    changed_steps = []
+    for t in range(2 * k + 1):
+        u, state = tx.update(_grad(t), state, params)
+        cur = np.asarray(jax.tree.leaves(api.pool_stats(state, "32x20"))[1])
+        if prev is not None:
+            changed_steps.append(not np.allclose(cur, prev))
+        prev = cur.copy()
+    # refreshes at counts 0, k, 2k -> changes visible at t=k and t=2k
+    assert changed_steps == [t % k == k - 1 for t in range(2 * k)]
+
+
+def test_refresh_schedule_validated():
+    with pytest.raises(ValueError, match="refresh_schedule"):
+        api.EngineConfig(refresh_schedule="sometimes")
+
+
+def test_staggered_sadagrad_full_window_equivalence():
+    """update_every=1 degenerates both schedules to refresh-every-step, and
+    the OCO learner stays bitwise stable under the pooled layout."""
+    x1, st1 = jnp.zeros((16,)), sadagrad_init(16, 4)
+    rng = np.random.default_rng(0)
+    for t in range(5):
+        g = jnp.asarray(rng.normal(size=16), jnp.float32)
+        x1, st1 = sadagrad_step(st1, x1, g, 0.1)
+    assert np.isfinite(np.asarray(x1)).all()
+    assert st1.sketch.eigvecs.shape == (16, 4)
+
+
+# --------------------------------------------------------- diag_eps satellite
+
+
+def test_diag_eps_decoupled_from_graft_eps():
+    """diag_eps=None keeps the historic graft_eps coupling (parity); setting
+    it changes only the diagonal-fallback leaves."""
+    params = _params()
+    g = _grad(0)
+    base = sketchy(SketchyConfig(rank=8, block_size=32, update_every=1))
+    same = sketchy(SketchyConfig(rank=8, block_size=32, update_every=1,
+                                 diag_eps=1e-8))   # == default graft_eps
+    loose = sketchy(SketchyConfig(rank=8, block_size=32, update_every=1,
+                                  diag_eps=1e-2))
+    u0, _ = base.update(g, base.init(params), params)
+    u1, _ = same.update(g, same.init(params), params)
+    u2, _ = loose.update(g, loose.init(params), params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(u0[k]), np.asarray(u1[k]))
+    # only the vector (diag-fallback) leaf responds to diag_eps
+    assert not np.allclose(np.asarray(u0["v"]), np.asarray(u2["v"]))
+    for k in ("m", "t", "b", "m2"):
+        np.testing.assert_array_equal(np.asarray(u0[k]), np.asarray(u2[k]))
+
+
+# ------------------------------------------------- checkpoint migration shim
+
+
+def _synthesize_pre_pool_state(state, params, block_size):
+    """Re-slice a pooled engine state into the PR-1 per-leaf layout (tagged),
+    as an old checkpoint would have stored it."""
+    OldState = collections.namedtuple("OldState", ["count", "leaves"])
+    OldLeaf = collections.namedtuple("OldLeaf", ["stats", "graft"])
+    index = pool.build_index(
+        tuple(tuple(p.shape) for p in jax.tree.leaves(params)), block_size)
+    leaves = []
+    for i, plan in enumerate(index.leaves):
+        leaf = state.leaves[i]
+        if plan.group is None:
+            leaves.append(OldLeaf(stats=leaf.stats, graft=None))
+            continue
+        key = index.groups[plan.group].key
+        sliced = jax.tree.map(
+            lambda t: api.Tagged(
+                t.value[plan.offset:plan.offset + plan.info.num_blocks],
+                t.meta),
+            state.pools[key], is_leaf=lambda x: isinstance(x, api.Tagged))
+        leaves.append(OldLeaf(stats=sliced, graft=leaf.graft))
+    return OldState(count=state.count, leaves=tuple(leaves))
+
+
+def test_checkpoint_migrates_pre_pool_layout(tmp_path):
+    from repro.train import checkpoint as ckpt
+
+    params = _params()
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, beta2=0.99,
+                               update_every=2))
+    state = tx.init(params)
+    u, state = tx.update(_grad(0), state, params)
+    old = _synthesize_pre_pool_state(state, params, 32)
+
+    d = str(tmp_path)
+    ckpt.save(d, 11, {"opt": {"precond": old}})
+    restored, step, _ = ckpt.restore(d, {"opt": {"precond": tx.init(params)}})
+    assert step == 11
+    got = api.leaves_with_meta(restored["opt"]["precond"])
+    want = api.leaves_with_meta(state)
+    assert len(got) == len(want)
+    for (mg, a), (mw, b) in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_migration_rejects_incompatible(tmp_path):
+    """A pre-pool checkpoint from a different optimizer family fails loudly
+    instead of silently regrouping."""
+    from repro.core.shampoo import shampoo
+    from repro.train import checkpoint as ckpt
+
+    params = _params()
+    sk = sketchy(SketchyConfig(rank=8, block_size=32, update_every=2))
+    old = _synthesize_pre_pool_state(sk.init(params), params, 32)
+    d = str(tmp_path)
+    ckpt.save(d, 0, {"opt": {"precond": old}})
+    sh = shampoo(ShampooConfig(block_size=32))
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"opt": {"precond": sh.init(params)}})
