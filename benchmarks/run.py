@@ -11,6 +11,9 @@ writes the same rows as a machine-readable JSON list for trajectory files):
   opt_step_time_multileaf  pooled-engine step over a >=100-leaf tree: wall
                            time + compiled-computation (jaxpr eqn) counts vs
                            the per-leaf dispatch baseline
+  opt_step_time_kernels    pooled multi-leaf step per kernel_backend
+                           ("xla" batched refs vs "pallas" grid-over-N
+                           batched kernels; interpret mode on CPU)
 """
 from __future__ import annotations
 
@@ -292,6 +295,38 @@ def bench_opt_step_time_multileaf(n_leaves: int = 128, iters: int = 10) -> None:
          f"eigh_sites={pooled_eigh}_vs_{per_leaf_eigh}")
 
 
+def bench_opt_step_time_kernels(n_leaves: int = 32, iters: int = 5) -> None:
+    """Kernel-backend comparison on the pooled multi-leaf config: the same
+    packed (N, bs_m, bs_n) dispatch, once through the pure-XLA batched refs
+    and once through the grid-over-N batched Pallas kernels (Mosaic on TPU;
+    interpret mode on CPU, where the row is a correctness/overhead probe, not
+    a speed claim).  update_every=1 so every step pays the batched gram +
+    fused low-rank apply."""
+    from repro.core import pool
+    from repro.core.sketchy import SketchyConfig, sketchy
+
+    rng = np.random.default_rng(0)
+    mk = lambda: jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    params = {f"w{i:03d}": mk() for i in range(n_leaves)}
+    g = {k: mk() for k in params}
+    index = pool.build_index(((32, 32),) * n_leaves, 32)
+    for backend in ("xla", "pallas"):
+        tx = sketchy(SketchyConfig(rank=8, block_size=32, update_every=1,
+                                   kernel_backend=backend))
+        state = tx.init(params)
+        upd = jax.jit(lambda gg, s: tx.update(gg, s))
+        u, st = upd(g, state)   # warmup/compile
+        jax.block_until_ready(u)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            u, st = upd(g, st)
+        jax.block_until_ready(u)
+        us = (time.perf_counter() - t0) * 1e6 / iters
+        _row(f"opt_step_time_kernels_{backend}", us,
+             f"leaves={n_leaves} pooled_blocks={index.total_blocks} "
+             f"rank=8 block=32 update_every=1")
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", metavar="PATH", default=None,
@@ -308,6 +343,7 @@ def main(argv=None) -> None:
     bench_fig2_lm_quality()
     bench_opt_step_time()
     bench_opt_step_time_multileaf()
+    bench_opt_step_time_kernels()
 
     if args.json:
         with open(args.json, "w") as f:

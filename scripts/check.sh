@@ -1,15 +1,36 @@
 #!/usr/bin/env bash
 # Smoke targets.
 #   scripts/check.sh [extra pytest args...]   full tier-1 + fast benchmarks
+#                                             (runs the kernels tier first)
 #   scripts/check.sh fast [extra pytest args] unit tests minus the slow
 #                                             trainer/distributed suites
-# Both tiers run a compileall syntax gate first so breakage surfaces before
+#   scripts/check.sh kernels [extra args]     batched Pallas kernels
+#                                             (interpret mode) vs refs,
+#                                             backend registry, and the
+#                                             pool-parity pins
+# All tiers run a compileall syntax gate first so breakage surfaces before
 # pytest collection.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "--- syntax gate (python -m compileall src) ---"
 python -m compileall -q src
+
+kernels_tier() {
+  # interpret-mode kernel sweeps + registry dispatch + the bitwise
+  # pool-parity pins against tests/reference_impls.py
+  python -m pytest -x -q \
+    tests/test_kernels.py \
+    tests/test_kernel_registry.py \
+    tests/test_pool.py::test_pooled_engine_bitwise_matches_per_leaf \
+    "$@"
+}
+
+if [[ "${1:-}" == "kernels" ]]; then
+  shift
+  kernels_tier "$@"
+  exit 0
+fi
 
 if [[ "${1:-}" == "fast" ]]; then
   shift
@@ -24,7 +45,15 @@ if [[ "${1:-}" == "fast" ]]; then
   exit 0
 fi
 
-python -m pytest -x -q "$@"
+echo "--- kernels tier (batched Pallas vs refs + pool-parity pins) ---"
+kernels_tier
+
+# rest of tier-1; the kernels-tier files already ran above, skip re-running
+# the interpret-mode Pallas sweeps (test_pool re-runs only its one pin)
+python -m pytest -x -q \
+  --ignore=tests/test_kernels.py \
+  --ignore=tests/test_kernel_registry.py \
+  "$@"
 
 echo "--- fast benchmarks (fig1 memory + lemma-1 FD error) ---"
 PYTHONPATH=src python - <<'PY'

@@ -5,8 +5,9 @@ The optimizer layer is built around the unified Preconditioner API
 per-variant ``Preconditioner`` implementations, with ``StateMeta`` metadata
 attached to every optimizer-state leaf.
 """
-from repro.core.fd import FDState, fd_init, fd_update, fd_covariance, \
-    fd_apply_inverse_root, fd_inverse_root_coeffs  # noqa: F401
+from repro.core.fd import FDState, fd_init, fd_update, fd_update_batched, \
+    fd_covariance, fd_apply_inverse_root, fd_apply_inverse_root_batched, \
+    fd_inverse_root_coeffs  # noqa: F401
 from repro.core.api import (  # noqa: F401
     EngineConfig, InjectState, Preconditioner, PrecondState, StateMeta,
     Tagged, get_hyperparams, get_stage, inject_hyperparams, leaves_with_meta,

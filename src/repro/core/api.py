@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import blocking, pool
 from repro.core.transform import GradientTransformation
+from repro.kernels import registry as kernel_registry
 
 PyTree = Any
 
@@ -175,6 +176,21 @@ class Preconditioner(Protocol):
       state = update_stats(state, G)        # every step (cheap accumulation)
       state = refresh(state, G)             # every cfg.update_every steps
       P     = precondition(state, G)        # every step (apply)
+
+    Batched execution: the engine dispatches each method once per pooled
+    ``(N, bs_m, bs_n)`` shape group.  An implementation may provide
+    ``update_stats_batched`` / ``refresh_batched`` / ``precondition_batched``
+    taking the whole stacked state + gradient stack — sketchy and shampoo do,
+    routing the hot contractions through the grid-over-N batched kernels of
+    their injected ``KernelSet`` — in which case the engine calls the batched
+    entry point directly (no vmap).  Without them the engine falls back to
+    ``jax.vmap`` of the per-block method, so minimal implementations keep
+    working unchanged.
+
+    Kernel injection: implementations that declare a ``kernels`` dataclass
+    field (default ``None``) receive the engine's resolved ``KernelSet``
+    (``EngineConfig.kernel_backend``) at transform-build time — one knob
+    selects the backend uniformly for every kron-style optimizer.
     """
     diagonal: bool
 
@@ -217,6 +233,11 @@ class EngineConfig:
     # exactly once per window, ~N/update_every eighs every step instead of N
     # on spike steps.
     refresh_schedule: str = "synchronized"
+    # Kernel backend for the pooled matrix hot path: "pallas" (grid-over-N
+    # batched kernels; interpret mode off-TPU), "xla" (pure-jnp batched
+    # refs), or "auto" (pallas on TPU, xla elsewhere; REPRO_KERNEL_BACKEND
+    # overrides the platform default).  Resolved once at transform build.
+    kernel_backend: str = "auto"
     state_dtype: Any = jnp.float32
     # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
     # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
@@ -228,6 +249,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown refresh_schedule {self.refresh_schedule!r}; "
                 f"expected one of {REFRESH_SCHEDULES}")
+        if self.kernel_backend not in kernel_registry.BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}; "
+                f"expected one of {kernel_registry.BACKENDS}")
 
 
 class LeafState(NamedTuple):
@@ -273,6 +298,36 @@ def graft_direction(g: jnp.ndarray, acc: jnp.ndarray, *, graft: str,
     return gn * jax.lax.rsqrt(acc + graft_eps), acc
 
 
+def _inject_kernels(precond: "Preconditioner",
+                    kernels: kernel_registry.KernelSet) -> "Preconditioner":
+    """Hand the engine's resolved KernelSet to implementations that want it.
+
+    Any dataclass Preconditioner declaring a ``kernels`` field (sketchy,
+    shampoo) gets the set injected — unless the caller already supplied one
+    explicitly, which wins.  Everything else passes through untouched.
+    """
+    if dataclasses.is_dataclass(precond) and not isinstance(precond, type):
+        names = {f.name for f in dataclasses.fields(precond)}
+        if "kernels" in names and getattr(precond, "kernels") is None:
+            return dataclasses.replace(precond, kernels=kernels)
+    return precond
+
+
+def _batched_method(precond: "Preconditioner", name: str):
+    """``fn(stacked_state, G_stack, count)`` for one Preconditioner method.
+
+    Prefers the implementation's ``<name>_batched`` (single call over the
+    whole packed pool stack — the kernel-backed hot path); falls back to
+    ``jax.vmap`` of the per-block method for minimal implementations.
+    """
+    batched = getattr(precond, name + "_batched", None)
+    if batched is not None:
+        return lambda s, G, count: batched(s, G, count=count)
+    per_block = getattr(precond, name)
+    return lambda s, G, count: jax.vmap(
+        lambda ss, GG: per_block(ss, GG, count=count))(s, G)
+
+
 def _index_unblocked(tree: PyTree, i: int) -> PyTree:
     """Record the owning-param index on param-shaped (non-blocked) tags."""
     def one(x):
@@ -289,10 +344,18 @@ def scale_by_preconditioner(precond: Preconditioner,
 
     Matrix blocks execute *pooled*: ``core/pool.py`` groups every block in
     the model by block shape and the three Preconditioner methods run once
-    per shape group over a packed ``(N, bs_m, bs_n)`` stack.  Only the
-    per-leaf residue (diag fallback, grafting norms, gating) stays leafwise.
+    per shape group over a packed ``(N, bs_m, bs_n)`` stack — via the
+    implementation's ``*_batched`` entry points (batched grid-over-N kernels
+    from the ``cfg.kernel_backend`` KernelSet) when it has them, else a vmap
+    fallback.  Only the per-leaf residue (diag fallback, grafting norms,
+    gating) stays leafwise.
     """
     diag_eps = cfg.graft_eps if cfg.diag_eps is None else cfg.diag_eps
+    precond = _inject_kernels(precond,
+                              kernel_registry.get_kernels(cfg.kernel_backend))
+    update_stats_b = _batched_method(precond, "update_stats")
+    refresh_b = _batched_method(precond, "refresh")
+    precondition_b = _batched_method(precond, "precondition")
 
     def index_of(shapes) -> pool.PoolIndex:
         return pool.build_index(
@@ -334,7 +397,7 @@ def scale_by_preconditioner(precond: Preconditioner,
 
     def refresh_group(grp: pool.PoolGroup, raw, gb, count):
         """Gated refresh over one packed stack (raw = untagged stats)."""
-        vrefresh = jax.vmap(lambda s, G: precond.refresh(s, G, count=count))
+        vrefresh = lambda s, G: refresh_b(s, G, count)
         if cfg.update_every <= 1:
             return vrefresh(raw, gb)
         if cfg.refresh_schedule == "synchronized":
@@ -387,16 +450,15 @@ def scale_by_preconditioner(precond: Preconditioner,
         packed = pool.pack(index, g32)
 
         # One update/refresh/precondition dispatch per SHAPE GROUP — the
-        # whole model's same-shaped blocks in one batched call each.
+        # whole model's same-shaped blocks in one batched call each, straight
+        # into the implementation's batched (kernel-backed) entry points.
         new_pools, pooled_dirs = {}, {}
         for grp in index.groups:
             gb = packed[grp.key]
             raw = untag(state.pools[grp.key])
-            raw = jax.vmap(
-                lambda s, G: precond.update_stats(s, G, count=count))(raw, gb)
+            raw = update_stats_b(raw, gb, count)
             raw = refresh_group(grp, raw, gb, count)
-            pooled_dirs[grp.key] = jax.vmap(
-                lambda s, G: precond.precondition(s, G, count=count))(raw, gb)
+            pooled_dirs[grp.key] = precondition_b(raw, gb, count)
             new_pools[grp.key] = tag_like(state.pools[grp.key], raw)
 
         # Per-leaf residue: diag fallback, grafting norms, gating.

@@ -37,7 +37,11 @@ class OptimizerConfig:
     block_size: int = 1024
     update_every: int = 10
     start_preconditioning_step: int = 0
-    use_kernels: bool = False
+    # kernel backend for the pooled matrix hot path (kernels/registry.py):
+    # "pallas" | "xla" | "auto" (pallas on TPU, xla elsewhere;
+    # REPRO_KERNEL_BACKEND env overrides the platform default).  Replaces
+    # the old sketchy-private use_kernels flag; applies to shampoo too.
+    kernel_backend: str = "auto"
     # refresh phasing over the pooled block stacks (core/pool.py):
     # synchronized reproduces the seed exactly; staggered spreads the eigh
     # cost uniformly (one 1/update_every slice of blocks per step).
@@ -54,13 +58,14 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
-            use_kernels=cfg.use_kernels))
+            kernel_backend=cfg.kernel_backend))
     if cfg.name == "shampoo":
         return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
             block_size=cfg.block_size, beta2=beta2,
             root_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
-            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps))
+            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
+            kernel_backend=cfg.kernel_backend))
     if cfg.name == "adam":
         return adam_lib.adam(adam_lib.AdamConfig(
             beta1=cfg.beta1, beta2=beta2))

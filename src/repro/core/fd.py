@@ -11,6 +11,16 @@ TPU adaptation (DESIGN.md §3): instead of eigendecomposing the d x d matrix
 eigendecompose the (ell+r) x (ell+r) Gram matrix of ``M = [sqrt(beta2)*B, A]``
 — one tall-skinny MXU matmul plus a small eigh. Identical result, never
 materializes d x d, and avoids large-matrix SVD which TPUs lack.
+
+Kernel injection: every function takes an optional
+``kernels: repro.kernels.registry.KernelSet``.  The single-block entry
+points use ``kernels.gram`` / ``kernels.lowrank_apply``; the ``*_batched``
+variants — the pooled-engine hot path, operating on a whole packed
+``(N, ...)`` pool stack at once — use ``kernels.batched_gram`` /
+``kernels.batched_lowrank_apply`` (grid-over-N Pallas kernels on TPU).  With
+``kernels=None`` everything falls back to plain jnp, and the batched jnp
+expressions mirror ``jax.vmap`` of the single-block ones primitive-for-
+primitive so the synchronized schedule stays bitwise-reproducible.
 """
 from __future__ import annotations
 
@@ -36,7 +46,7 @@ def fd_init(d: int, ell: int, dtype=jnp.float32) -> FDState:
 
 
 def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
-              gram_fn=None) -> FDState:
+              kernels=None) -> FDState:
     """One FD-update step on the PSD increment ``new_factor @ new_factor.T``.
 
     Args:
@@ -46,8 +56,8 @@ def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
         left factor it is the gradient matrix G_t itself (L += G G^T), and
         G_t^T for the right factor.
       beta2: EMA decay (1.0 recovers the unweighted paper Alg. 1).
-      gram_fn: optional C = M^T M implementation (Pallas kernel injection
-        point); defaults to jnp.
+      kernels: optional ``KernelSet``; ``kernels.gram`` supplies the
+        C = M^T M contraction (Pallas kernel injection point).
 
     Returns:
       Updated state; ``state.rho`` accumulates escaped mass with the same
@@ -63,10 +73,10 @@ def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
     B = U.astype(compute_dtype) * jnp.sqrt(beta2 * s.astype(compute_dtype))[None, :]
     M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=1)  # (d, ell+r)
 
-    if gram_fn is None:
+    if kernels is None:
         C = M.T @ M
     else:
-        C = gram_fn(M)
+        C = kernels.gram(M)
     C = 0.5 * (C + C.T)  # symmetrize for eigh stability
 
     lam, V = jnp.linalg.eigh(C)          # ascending
@@ -82,6 +92,50 @@ def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
     inv_sqrt = jnp.where(lam_top > 1e-30, jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
     U_new = (M @ V[:, :ell]) * inv_sqrt[None, :]
     s_new = lam_top - rho_t  # deflate: last entry becomes exactly 0
+
+    return FDState(
+        eigvecs=U_new.astype(U.dtype),
+        eigvals=s_new.astype(s.dtype),
+        rho=(beta2 * rho + rho_t).astype(state.rho.dtype),
+    )
+
+
+def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
+                      beta2: float = 1.0, kernels=None) -> FDState:
+    """``fd_update`` over a whole packed pool stack in one batched call.
+
+    ``state`` leaves carry a leading pool dim N (eigvecs (N, d, ell), eigvals
+    (N, ell), rho (N,)); ``new_factor`` is (N, d, r).  With ``kernels`` the
+    Gram goes through ``kernels.batched_gram`` (grid-over-N Pallas on TPU);
+    without, the jnp expressions mirror ``jax.vmap(fd_update)`` exactly.
+    """
+    U, s, rho = state
+    _, d, ell = U.shape
+    if new_factor.ndim == 2:
+        new_factor = new_factor[..., None]
+    compute_dtype = jnp.promote_types(U.dtype, jnp.float32)
+
+    B = U.astype(compute_dtype) \
+        * jnp.sqrt(beta2 * s.astype(compute_dtype))[:, None, :]
+    M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=2)
+
+    if kernels is None:
+        C = jnp.matmul(jnp.swapaxes(M, -1, -2), M)
+    else:
+        C = kernels.batched_gram(M)
+    C = 0.5 * (C + jnp.swapaxes(C, -1, -2))
+
+    lam, V = jnp.linalg.eigh(C)             # ascending, batched
+    lam = jnp.maximum(lam[..., ::-1], 0.0)  # descending, clip tiny negatives
+    V = V[..., ::-1]
+
+    lam_top = lam[..., :ell]
+    rho_t = lam_top[..., ell - 1]           # (N,)
+
+    inv_sqrt = jnp.where(lam_top > 1e-30,
+                         jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
+    U_new = jnp.matmul(M, V[..., :ell]) * inv_sqrt[:, None, :]
+    s_new = lam_top - rho_t[..., None]
 
     return FDState(
         eigvecs=U_new.astype(U.dtype),
@@ -108,6 +162,8 @@ def fd_inverse_root_coeffs(state: FDState, *, exponent: float, eps: float
     Uses the eigenpair representation: eigenvalues of the compensated
     preconditioner are (s_i + rho + eps) on span(U) and (rho + eps) on the
     orthogonal complement. Elementwise — no iterative root solve needed.
+    Batch-polymorphic: with a pooled state (s (N, ell), rho (N,)) it returns
+    base (N,) and coeffs (N, ell).
     """
     _, s, rho = state
     damp = rho + eps
@@ -116,21 +172,37 @@ def fd_inverse_root_coeffs(state: FDState, *, exponent: float, eps: float
     tol = 1e-10
     base = jnp.where(damp > tol, jnp.power(jnp.maximum(damp, tol), exponent),
                      0.0)
-    lam = s + damp
+    lam = s + damp[..., None]
     coeffs = jnp.where(lam > tol, jnp.power(jnp.maximum(lam, tol), exponent),
-                       0.0) - base
+                       0.0) - base[..., None]
     return base, coeffs
 
 
 def fd_apply_inverse_root(state: FDState, G: jnp.ndarray, *, exponent: float,
-                          eps: float, lowrank_fn=None) -> jnp.ndarray:
+                          eps: float, kernels=None) -> jnp.ndarray:
     """Compute (sketch + (rho+eps) I)^{exponent} @ G without forming d x d.
 
-    lowrank_fn: optional fused kernel with signature (U, coeffs, base, G).
+    kernels: optional ``KernelSet``; ``kernels.lowrank_apply`` supplies the
+    fused low-rank + diagonal apply.
     """
     base, coeffs = fd_inverse_root_coeffs(state, exponent=exponent, eps=eps)
     U = state.eigvecs
-    if lowrank_fn is not None:
-        return lowrank_fn(U, coeffs, base, G)
+    if kernels is not None:
+        return kernels.lowrank_apply(U, coeffs, base, G)
     proj = U.T @ G
     return base * G + U @ (coeffs[:, None] * proj)
+
+
+def fd_apply_inverse_root_batched(state: FDState, G: jnp.ndarray, *,
+                                  exponent: float, eps: float,
+                                  kernels=None) -> jnp.ndarray:
+    """``fd_apply_inverse_root`` over a packed pool stack (state leaves and
+    G carry a leading pool dim N).  With ``kernels`` the fused apply goes
+    through ``kernels.batched_lowrank_apply``; without, the jnp expressions
+    mirror ``jax.vmap(fd_apply_inverse_root)`` exactly."""
+    base, coeffs = fd_inverse_root_coeffs(state, exponent=exponent, eps=eps)
+    U = state.eigvecs
+    if kernels is not None:
+        return kernels.batched_lowrank_apply(U, coeffs, base, G)
+    proj = jnp.matmul(jnp.swapaxes(U, -1, -2), G)
+    return base[..., None, None] * G + jnp.matmul(U, coeffs[..., None] * proj)

@@ -7,6 +7,13 @@ roots recomputed every ``root_every`` steps via eigh (the ``eigh=True`` path
 the paper uses, App. E).  Second-moment memory is O(bm^2 + bn^2) per block —
 what Sketchy reduces.  Blocking, grafting, the diagonal fallback, and gating
 live in the engine (core/api.py).
+
+Shampoo's L/R statistic updates are the same Gram contraction as the FD
+update (cf. Morwani et al., *A New Perspective on Shampoo's Preconditioner*):
+L += G G^T is the Gram of G^T and R += G^T G the Gram of G.  The engine
+injects its resolved ``KernelSet`` into ``kernels``, so the batched methods
+route both contractions through the grid-over-N batched gram kernel — the
+same kernel path Sketchy uses, one call per packed pool stack.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import api, blocking
 from repro.core.transform import GradientTransformation
+from repro.kernels.registry import KernelSet
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +39,8 @@ class ShampooConfig:
     graft: str = "rmsprop_normalized"
     refresh_schedule: str = "synchronized"  # synchronized | staggered
     state_dtype: Any = jnp.float32
+    # kernel backend for the pooled stat-update Grams: "pallas"|"xla"|"auto"
+    kernel_backend: str = "auto"
 
 
 class ShampooBlockStats(NamedTuple):
@@ -41,17 +51,23 @@ class ShampooBlockStats(NamedTuple):
 
 
 def _inv_root(m: jnp.ndarray, eps: float, power: float) -> jnp.ndarray:
-    """(d, d) PSD -> (M + eps*I)^{power} via eigh."""
+    """(..., d, d) PSD -> (M + eps*I)^{power} via eigh (batch-polymorphic)."""
     d = m.shape[-1]
     lam, V = jnp.linalg.eigh(m + eps * jnp.eye(d, dtype=m.dtype))
     lam = jnp.maximum(lam, eps)
-    return (V * jnp.power(lam, power)[None, :]) @ V.T
+    return jnp.matmul(V * jnp.power(lam, power)[..., None, :],
+                      jnp.swapaxes(V, -1, -2))
 
 
 @dataclasses.dataclass(frozen=True)
 class ShampooPreconditioner:
-    """Dense L/R factors + cached inverse roots (per block)."""
+    """Dense L/R factors + cached inverse roots (per block).
+
+    ``kernels`` is injected by the engine (``EngineConfig.kernel_backend``);
+    the batched methods run once per packed ``(N, bs_m, bs_n)`` pool stack.
+    """
     cfg: ShampooConfig
+    kernels: Optional[KernelSet] = None
 
     diagonal: ClassVar[bool] = False
 
@@ -66,6 +82,8 @@ class ShampooPreconditioner:
                        "preconditioner", blocked=True),
             PR=api.tag(jnp.eye(info.bs_n, dtype=dt),
                        "preconditioner", blocked=True))
+
+    # ------------------------------------------------- per-block (reference)
 
     def update_stats(self, state, G, *, count):
         # statistics every step (classic Shampoo; the FD variant is
@@ -86,6 +104,31 @@ class ShampooPreconditioner:
     def precondition(self, state, G, *, count):
         return state.PL @ G @ state.PR
 
+    # ------------------------------------------- pooled-stack (kernel path)
+
+    def update_stats_batched(self, state, G, *, count):
+        # L += gram(G^T), R += gram(G): the FD paper's tall-skinny Gram,
+        # batched over the pool dim by the injected kernel set.
+        if self.kernels is not None:
+            L_inc = self.kernels.batched_gram(jnp.swapaxes(G, -1, -2))
+            R_inc = self.kernels.batched_gram(G)
+        else:
+            L_inc = jnp.matmul(G, jnp.swapaxes(G, -1, -2))
+            R_inc = jnp.matmul(jnp.swapaxes(G, -1, -2), G)
+        return ShampooBlockStats(
+            L=self.cfg.beta2 * state.L + L_inc,
+            R=self.cfg.beta2 * state.R + R_inc,
+            PL=state.PL, PR=state.PR)
+
+    def refresh_batched(self, state, G, *, count):
+        return ShampooBlockStats(
+            L=state.L, R=state.R,
+            PL=_inv_root(state.L, self.cfg.matrix_eps, -0.25),
+            PR=_inv_root(state.R, self.cfg.matrix_eps, -0.25))
+
+    def precondition_batched(self, state, G, *, count):
+        return jnp.matmul(jnp.matmul(state.PL, G), state.PR)
+
 
 def shampoo(cfg: ShampooConfig = ShampooConfig()) -> GradientTransformation:
     return api.scale_by_preconditioner(
@@ -96,6 +139,7 @@ def shampoo(cfg: ShampooConfig = ShampooConfig()) -> GradientTransformation:
             start_preconditioning_step=cfg.start_preconditioning_step,
             graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
             refresh_schedule=cfg.refresh_schedule,
+            kernel_backend=cfg.kernel_backend,
             state_dtype=cfg.state_dtype))
 
 

@@ -15,18 +15,25 @@ instead of O(m^2 + n^2) (Shampoo) or O(mn) (Adam).
 Blocking, the diagonal (RMSProp) path for vectors/scalars, grafting (paper
 App. C: RMSPROP_NORMALIZED), and the ``update_every`` /
 ``start_preconditioning_step`` gating all live in the engine (core/api.py);
-this module only supplies the FD sketch pair.
+this module only supplies the FD sketch pair.  The engine injects its
+resolved ``KernelSet`` (``kernel_backend`` knob: pallas | xla | auto) into
+``kernels``; the ``*_batched`` methods — the pooled hot path — route the
+Gram and the fused low-rank apply through the grid-over-N batched kernels,
+one call per packed pool stack instead of a vmap over single-block kernels.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, ClassVar, NamedTuple, Optional
+from typing import Any, ClassVar, NamedTuple, Optional
 
 import jax.numpy as jnp
 
 from repro.core import api, blocking
-from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
+from repro.core.fd import (FDState, fd_apply_inverse_root,
+                           fd_apply_inverse_root_batched, fd_init, fd_update,
+                           fd_update_batched)
 from repro.core.transform import GradientTransformation
+from repro.kernels.registry import KernelSet
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +50,9 @@ class SketchyConfig:
     refresh_schedule: str = "synchronized"  # synchronized | staggered
     exponent: float = -0.25         # per-side inverse root (Alg. 3)
     state_dtype: Any = jnp.float32
-    use_kernels: bool = False       # route matmuls through Pallas ops
+    # kernel backend for the pooled hot path (engine-resolved KernelSet):
+    # "pallas" | "xla" | "auto" — replaces the old private use_kernels flag
+    kernel_backend: str = "auto"
 
 
 class SketchyBlockStats(NamedTuple):
@@ -59,10 +68,14 @@ def _tag_fd(st: FDState) -> FDState:
 
 @dataclasses.dataclass(frozen=True)
 class SketchyPreconditioner:
-    """FD sketch pair (paper Alg. 3) — the whole optimizer-specific surface."""
+    """FD sketch pair (paper Alg. 3) — the whole optimizer-specific surface.
+
+    ``kernels`` is injected by the engine (``EngineConfig.kernel_backend``);
+    ``None`` means plain jnp.  The batched methods run once per packed
+    ``(N, bs_m, bs_n)`` pool stack.
+    """
     cfg: SketchyConfig
-    gram_fn: Optional[Callable] = None
-    lowrank_fn: Optional[Callable] = None
+    kernels: Optional[KernelSet] = None
 
     diagonal: ClassVar[bool] = False
 
@@ -73,46 +86,63 @@ class SketchyPreconditioner:
             left=_tag_fd(fd_init(info.bs_m, ell_l, self.cfg.state_dtype)),
             right=_tag_fd(fd_init(info.bs_n, ell_r, self.cfg.state_dtype)))
 
+    # ------------------------------------------------- per-block (reference)
+
     def update_stats(self, state, G, *, count):
         return state  # FD observation is the gated refresh, not per-step
 
     def refresh(self, state, G, *, count):
         return SketchyBlockStats(
             left=fd_update(state.left, G, self.cfg.beta2,
-                           gram_fn=self.gram_fn),
+                           kernels=self.kernels),
             right=fd_update(state.right, G.T, self.cfg.beta2,
-                            gram_fn=self.gram_fn))
+                            kernels=self.kernels))
 
     def precondition(self, state, G, *, count):
         tmp = fd_apply_inverse_root(state.left, G,
                                     exponent=self.cfg.exponent,
                                     eps=self.cfg.matrix_eps,
-                                    lowrank_fn=self.lowrank_fn)
+                                    kernels=self.kernels)
         tmpT = fd_apply_inverse_root(state.right, tmp.T,
                                      exponent=self.cfg.exponent,
                                      eps=self.cfg.matrix_eps,
-                                     lowrank_fn=self.lowrank_fn)
+                                     kernels=self.kernels)
         return tmpT.T
+
+    # ------------------------------------------- pooled-stack (kernel path)
+
+    def update_stats_batched(self, state, G, *, count):
+        return state
+
+    def refresh_batched(self, state, G, *, count):
+        return SketchyBlockStats(
+            left=fd_update_batched(state.left, G, self.cfg.beta2,
+                                   kernels=self.kernels),
+            right=fd_update_batched(state.right, jnp.swapaxes(G, -1, -2),
+                                    self.cfg.beta2, kernels=self.kernels))
+
+    def precondition_batched(self, state, G, *, count):
+        tmp = fd_apply_inverse_root_batched(
+            state.left, G, exponent=self.cfg.exponent,
+            eps=self.cfg.matrix_eps, kernels=self.kernels)
+        tmpT = fd_apply_inverse_root_batched(
+            state.right, jnp.swapaxes(tmp, -1, -2),
+            exponent=self.cfg.exponent, eps=self.cfg.matrix_eps,
+            kernels=self.kernels)
+        return jnp.swapaxes(tmpT, -1, -2)
 
 
 def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
     """S-Shampoo direction transform (emits a descent direction, no lr)."""
-    gram_fn = None
-    lowrank_fn = None
-    if cfg.use_kernels:
-        from repro.kernels.gram import ops as gram_ops
-        from repro.kernels.lowrank import ops as lowrank_ops
-        gram_fn = gram_ops.gram
-        lowrank_fn = lowrank_ops.lowrank_apply
-
     return api.scale_by_preconditioner(
-        SketchyPreconditioner(cfg, gram_fn=gram_fn, lowrank_fn=lowrank_fn),
+        SketchyPreconditioner(cfg),
         api.EngineConfig(
             block_size=cfg.block_size, beta2=cfg.beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
             refresh_schedule=cfg.refresh_schedule,
+            kernel_backend=cfg.kernel_backend,
             state_dtype=cfg.state_dtype))
 
 

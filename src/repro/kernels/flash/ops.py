@@ -1,18 +1,17 @@
-"""Jitted public wrapper for flash attention."""
+"""Jitted public wrapper for flash attention.
+
+Interpret-vs-Mosaic comes from the kernel registry's cached platform probe —
+resolved once per process, not re-evaluated per call at trace time.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.flash.kernel import flash_attention_pallas
-from repro.kernels.flash.ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True) -> jnp.ndarray:
     return flash_attention_pallas(q, k, v, causal=causal,
-                                  interpret=not _on_tpu())
+                                  interpret=registry.interpret_mode())

@@ -1,13 +1,29 @@
-"""Pallas TPU kernel: Gram matrix C = A^T A with tiled reduction.
+"""Pallas TPU kernels: Gram matrix C = A^T A with tiled reduction.
 
 This is the tall-skinny contraction at the heart of every FD update
 (DESIGN.md §3): M = [sqrt(beta2) B, G] is (d, ell+r) and we need its
 (ell+r, ell+r) Gram. The reduction dim d streams through VMEM in ``bd``
 tiles while each (bk x bk) output tile stays VMEM-resident and accumulates —
-MXU-aligned when tiles are multiples of 128 (default ell=256 is).
+MXU-aligned when tiles are multiples of 128 (default ell=256 is).  Inputs of
+any float dtype (bf16/fp16/f32) are upcast in-kernel so the accumulator is
+always f32.
 
-Grid: (k_tiles_i, k_tiles_j, d_tiles); d is the innermost (sequential)
-dimension so the output block revision is legal ("arbitrary" semantics).
+Single-block grid: (k_tiles_i, k_tiles_j, d_tiles); d is the innermost
+(sequential) dimension so the output block revision is legal ("arbitrary"
+semantics).
+
+Batched grid (``batched_gram_pallas``) — the pooled-stack entry point: the
+input is one packed ``(N, d, k)`` pool of same-shaped blocks (core/pool.py)
+and the pool dim N joins the grid directly instead of being vmapped over:
+
+    grid = (N / bn_stack, k_tiles_i, k_tiles_j, d_tiles)
+
+One program instance owns ``bn_stack`` blocks' (bk x bk) output tile (default
+1 — one program per block x output tile) and streams their shared d range
+through VMEM exactly like the single-block kernel; d stays innermost so each
+(n, i, j) accumulator is revisited sequentially.  N ragged against
+``bn_stack`` is zero-padded (a zero block contributes a zero Gram) and
+sliced off, as are ragged k/d tiles.
 """
 from __future__ import annotations
 
@@ -25,11 +41,12 @@ def _gram_kernel(a_i_ref, a_j_ref, out_ref, *, n_d_tiles: int):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a_i = a_i_ref[...]  # (bd, bk)
-    a_j = a_j_ref[...]  # (bd, bk)
+    # upcast before the dot: bf16/fp16 inputs accumulate in f32 (MXU-style)
+    a_i = a_i_ref[...].astype(jnp.float32)  # (bd, bk)
+    a_j = a_j_ref[...].astype(jnp.float32)  # (bd, bk)
     out_ref[...] += jax.lax.dot_general(
         a_i, a_j, (((0,), (0,)), ((), ())),
-        preferred_element_type=out_ref.dtype)
+        preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "bd", "interpret"))
@@ -60,3 +77,56 @@ def gram_pallas(a: jnp.ndarray, *, bk: int = 128, bd: int = 256,
         interpret=interpret,
     )(a, a)
     return out[:k, :k]  # f32 accumulator result (FD consumes f32)
+
+
+def _batched_gram_kernel(a_i_ref, a_j_ref, out_ref):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_i = a_i_ref[...].astype(jnp.float32)  # (bn_stack, bd, bk)
+    a_j = a_j_ref[...].astype(jnp.float32)
+    # per-block A^T A: contract the streamed d tile, batch the pool dim
+    out_ref[...] += jax.lax.dot_general(
+        a_i, a_j, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bk", "bd", "bn_stack", "interpret"))
+def batched_gram_pallas(a: jnp.ndarray, *, bk: int = 128, bd: int = 256,
+                        bn_stack: int = 1,
+                        interpret: bool = True) -> jnp.ndarray:
+    """C[n] = A[n]^T A[n] for a packed pool stack A of shape (N, d, k).
+
+    The pool dim N lives on the Pallas grid (``bn_stack`` blocks per program,
+    default one program per block x output tile) — no vmap over the
+    single-block kernel.  Ragged N/d/k are zero-padded and sliced off.
+    """
+    N, d, k = a.shape
+    bk = min(bk, max(k, 1))
+    bd = min(bd, max(d, 1))
+    bn_stack = min(bn_stack, max(N, 1))
+    pN = (-N) % bn_stack
+    pk = (-k) % bk
+    pd = (-d) % bd
+    if pN or pk or pd:
+        a = jnp.pad(a, ((0, pN), (0, pd), (0, pk)))
+    Np, dp, kp = a.shape
+    grid = (Np // bn_stack, kp // bk, kp // bk, dp // bd)
+
+    out = pl.pallas_call(
+        _batched_gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn_stack, bd, bk), lambda n, i, j, di: (n, di, i)),
+            pl.BlockSpec((bn_stack, bd, bk), lambda n, i, j, di: (n, di, j)),
+        ],
+        out_specs=pl.BlockSpec((bn_stack, bk, bk),
+                               lambda n, i, j, di: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, kp, kp), jnp.float32),
+        interpret=interpret,
+    )(a, a)
+    return out[:N, :k, :k]

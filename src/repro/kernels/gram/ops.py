@@ -1,21 +1,23 @@
-"""Jitted public wrapper for the gram kernel.
+"""Jitted public wrappers for the gram kernels.
 
-On CPU (this container) the kernel executes in interpret mode for
-correctness validation; on TPU the same pallas_call compiles to Mosaic.
+Interpret-vs-Mosaic is resolved ONCE by the kernel registry (platform probe
+cached at first use — not re-evaluated per call at trace time); on CPU the
+kernels execute in interpret mode for correctness validation, on TPU the
+same pallas_call compiles to Mosaic.  Backend selection (pallas vs the jnp
+refs) lives in ``repro.kernels.registry.get_kernels``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram.kernel import gram_pallas
-from repro.kernels.gram.ref import gram_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels import registry
 
 
 def gram(a: jnp.ndarray) -> jnp.ndarray:
-    """C = A^T A. Kernel on TPU, interpret-mode kernel elsewhere."""
-    return gram_pallas(a, interpret=not _on_tpu())
+    """C = A^T A via the Pallas kernel (interpret mode off-TPU)."""
+    return registry.get_kernels("pallas").gram(a)
+
+
+def batched_gram(a: jnp.ndarray) -> jnp.ndarray:
+    """C[n] = A[n]^T A[n] over a (N, d, k) pool stack, grid-over-N."""
+    return registry.get_kernels("pallas").batched_gram(a)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused low-rank + diagonal inverse-root apply.
+"""Pallas TPU kernels: fused low-rank + diagonal inverse-root apply.
 
 The Sketchy preconditioner application (DESIGN.md §3):
 
@@ -8,9 +8,21 @@ U is (d, ell) with ell <= 256 by default, so U (1024 x 256 fp32 = 1 MiB) and
 one (d, bn) tile of G stay VMEM-resident together; both matmuls and the
 diagonal scale fuse into a single pass over G — HBM traffic is exactly
 read(G) + read(U) + write(Y) instead of three round trips for the unfused
-projection / scale / expand chain.
+projection / scale / expand chain.  bf16/fp16 operands are upcast in-kernel
+so both matmuls accumulate in f32.
 
-Grid: 1-D over column tiles of G.
+Single-block grid: 1-D over column tiles of G.
+
+Batched grid (``batched_lowrank_apply_pallas``) — the pooled-stack entry
+point: every operand gains a leading pool dim N (U: (N, d, ell), coeffs:
+(N, ell), base: (N,), G: (N, d, n)) and N joins the grid directly:
+
+    grid = (N / bn_stack, n_tiles)
+
+One program fuses the full low-rank apply for ``bn_stack`` blocks' (d, bn)
+column tile of G (default 1 — one program per block x column tile), keeping
+those blocks' U factors VMEM-resident.  N ragged against ``bn_stack`` is
+zero-padded (zero U/base produce a zero output block) and sliced off.
 """
 from __future__ import annotations
 
@@ -22,9 +34,9 @@ from jax.experimental import pallas as pl
 
 
 def _lowrank_kernel(u_ref, coeffs_ref, base_ref, g_ref, out_ref):
-    u = u_ref[...]                  # (d, ell)
-    g = g_ref[...]                  # (d, bn)
-    coeffs = coeffs_ref[...]        # (1, ell)
+    u = u_ref[...].astype(jnp.float32)   # (d, ell)
+    g = g_ref[...].astype(jnp.float32)   # (d, bn)
+    coeffs = coeffs_ref[...]             # (1, ell) f32
     base = base_ref[0, 0]
     # P = U^T G : (ell, bn)
     proj = jax.lax.dot_general(u, g, (((0,), (0,)), ((), ())),
@@ -32,7 +44,7 @@ def _lowrank_kernel(u_ref, coeffs_ref, base_ref, g_ref, out_ref):
     proj = proj * coeffs.reshape(-1, 1)
     expand = jax.lax.dot_general(u, proj, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-    out_ref[...] = (base * g.astype(jnp.float32) + expand).astype(out_ref.dtype)
+    out_ref[...] = (base * g + expand).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -65,3 +77,59 @@ def lowrank_apply_pallas(u: jnp.ndarray, coeffs: jnp.ndarray, base: jnp.ndarray,
         interpret=interpret,
     )(u, coeffs2d, base2d, g)
     return out[:, :n]
+
+
+def _batched_lowrank_kernel(u_ref, coeffs_ref, base_ref, g_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)   # (bn_stack, d, ell)
+    g = g_ref[...].astype(jnp.float32)   # (bn_stack, d, bn)
+    coeffs = coeffs_ref[...]             # (bn_stack, ell) f32
+    base = base_ref[...]                 # (bn_stack, 1) f32
+    # P[n] = U[n]^T G[n] : (bn_stack, ell, bn)
+    proj = jax.lax.dot_general(u, g, (((1,), (1,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    proj = proj * coeffs[:, :, None]
+    expand = jax.lax.dot_general(u, proj, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+    out_ref[...] = (base[:, :, None] * g + expand).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bn_stack", "interpret"))
+def batched_lowrank_apply_pallas(u: jnp.ndarray, coeffs: jnp.ndarray,
+                                 base: jnp.ndarray, g: jnp.ndarray, *,
+                                 bn: int = 256, bn_stack: int = 1,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Y[n] = base[n]*G[n] + U[n] diag(coeffs[n]) U[n]^T G[n] over a pool.
+
+    u: (N, d, ell), coeffs: (N, ell), base: (N,), g: (N, d, n).  The pool dim
+    N lives on the Pallas grid — no vmap over the single-block kernel.
+    """
+    N, d, ell = u.shape
+    Ng, dg, n = g.shape
+    assert (N, d) == (Ng, dg), (u.shape, g.shape)
+    bn = min(bn, max(n, 1))
+    bn_stack = min(bn_stack, max(N, 1))
+    pN = (-N) % bn_stack
+    pn = (-n) % bn
+    coeffs2d = coeffs.reshape(N, ell).astype(jnp.float32)
+    base2d = jnp.asarray(base, jnp.float32).reshape(N, 1)
+    if pN or pn:
+        u = jnp.pad(u, ((0, pN), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, pN), (0, 0), (0, pn)))
+        coeffs2d = jnp.pad(coeffs2d, ((0, pN), (0, 0)))
+        base2d = jnp.pad(base2d, ((0, pN), (0, 0)))
+    Np, _, np_ = g.shape
+
+    out = pl.pallas_call(
+        _batched_lowrank_kernel,
+        grid=(Np // bn_stack, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn_stack, d, ell), lambda nb, j: (nb, 0, 0)),
+            pl.BlockSpec((bn_stack, ell), lambda nb, j: (nb, 0)),
+            pl.BlockSpec((bn_stack, 1), lambda nb, j: (nb, 0)),
+            pl.BlockSpec((bn_stack, d, bn), lambda nb, j: (nb, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn_stack, d, bn), lambda nb, j: (nb, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, d, np_), g.dtype),
+        interpret=interpret,
+    )(u, coeffs2d, base2d, g)
+    return out[:N, :, :n]

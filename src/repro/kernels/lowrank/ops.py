@@ -1,17 +1,24 @@
-"""Jitted public wrapper for the fused low-rank preconditioner apply."""
+"""Jitted public wrappers for the fused low-rank preconditioner apply.
+
+Interpret-vs-Mosaic is resolved ONCE by the kernel registry (platform probe
+cached at first use — not re-evaluated per call at trace time).  Backend
+selection (pallas vs the jnp refs) lives in
+``repro.kernels.registry.get_kernels``.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.lowrank.kernel import lowrank_apply_pallas
-from repro.kernels.lowrank.ref import lowrank_apply_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels import registry
 
 
 def lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
                   g: jnp.ndarray) -> jnp.ndarray:
-    return lowrank_apply_pallas(u, coeffs, base, g, interpret=not _on_tpu())
+    return registry.get_kernels("pallas").lowrank_apply(u, coeffs, base, g)
+
+
+def batched_lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
+                          g: jnp.ndarray) -> jnp.ndarray:
+    """Pool-stack apply (leading N on every operand), grid-over-N."""
+    return registry.get_kernels("pallas").batched_lowrank_apply(
+        u, coeffs, base, g)

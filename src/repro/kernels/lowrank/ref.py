@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the fused low-rank + diagonal apply."""
+"""Pure-jnp oracles for the fused low-rank + diagonal apply (also the "xla"
+backend entries).
+
+``batched_lowrank_apply_ref`` mirrors ``jax.vmap(lowrank_apply_ref)``
+primitive-for-primitive (batched dot_generals, broadcast scale) so the
+pooled engine's XLA path stays bitwise-identical to the per-leaf vmap
+dispatch it replaced.
+"""
+import jax
 import jax.numpy as jnp
 
 
@@ -6,3 +14,13 @@ def lowrank_apply_ref(u: jnp.ndarray, coeffs: jnp.ndarray, base,
                       g: jnp.ndarray) -> jnp.ndarray:
     proj = u.T @ g
     return base * g + u @ (coeffs[:, None] * proj)
+
+
+def batched_lowrank_apply_ref(u: jnp.ndarray, coeffs: jnp.ndarray, base,
+                              g: jnp.ndarray) -> jnp.ndarray:
+    """Per-pool-block apply: u (N, d, ell), coeffs (N, ell), base (N,),
+    g (N, d, n) -> (N, d, n)."""
+    proj = jax.lax.dot_general(u, g, (((1,), (1,)), ((0,), (0,))))
+    scaled = coeffs[:, :, None] * proj
+    expand = jax.lax.dot_general(u, scaled, (((2,), (1,)), ((0,), (0,))))
+    return base[:, None, None] * g + expand

@@ -1,0 +1,129 @@
+"""Backend-dispatch layer for the optimizer kernel set.
+
+One resolution point replaces the per-call ``_on_tpu()`` checks that used to
+live in every ``kernels/*/ops.py``: the platform is probed exactly once
+(module-level LRU cache), the resulting ``KernelSet`` is interned per
+resolved backend, and everything downstream — the pooled engine
+(core/api.py), Sketchy, Shampoo, the benchmarks — receives the same frozen
+set of callables.
+
+Backends
+  ``"pallas"``  Pallas kernels (kernels/gram, kernels/lowrank).  Compiled to
+                Mosaic on TPU; interpret-mode elsewhere (same kernel body,
+                bit-for-bit the tiled accumulation order).
+  ``"xla"``     Pure-jnp batched expressions (the ``ref.py`` oracles).  These
+                are written to lower to exactly the primitives ``jax.vmap``
+                of the single-block references produces, so the pooled
+                engine's synchronized schedule stays bitwise-pinned to
+                tests/reference_impls.py.
+  ``"auto"``    ``pallas`` on TPU, ``xla`` otherwise.  The
+                ``REPRO_KERNEL_BACKEND`` environment variable overrides the
+                platform default (benchmarks/CI force either path without
+                touching configs); explicit ``"pallas"``/``"xla"`` requests
+                always win over the environment.
+
+``KernelSet`` carries both the single-block entry points (direct FD calls,
+OCO learners, the per-leaf fallback engine) and the batched grid-over-N
+entry points the pooled ``(N, bs_m, bs_n)`` stacks dispatch to.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, NamedTuple
+
+import jax
+
+BACKENDS = ("auto", "xla", "pallas")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+class KernelSet(NamedTuple):
+    """The injectable kernel surface of the optimizer hot path.
+
+    gram(a):                      (d, k)    -> (k, k)     C = A^T A, f32
+    batched_gram(a):              (N, d, k) -> (N, k, k)  one gram per block
+    lowrank_apply(u, c, b, g):    (d, ell), (ell,), (), (d, n) -> (d, n)
+    batched_lowrank_apply(...):   leading N on every operand
+    """
+    backend: str
+    gram: Callable
+    batched_gram: Callable
+    lowrank_apply: Callable
+    batched_lowrank_apply: Callable
+
+
+@functools.lru_cache(maxsize=None)
+def on_tpu() -> bool:
+    """Platform probe, evaluated once per process (not per trace)."""
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """True when Pallas kernels must run interpreted (non-TPU hosts)."""
+    return not on_tpu()
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """``auto | xla | pallas`` -> concrete ``xla | pallas``.
+
+    ``auto`` honors ``REPRO_KERNEL_BACKEND`` before falling back to the
+    platform default; explicit requests bypass the environment.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    if backend != "auto":
+        return backend
+    env = os.environ.get(ENV_VAR, "")
+    if env:
+        if env not in ("xla", "pallas"):
+            raise ValueError(
+                f"{ENV_VAR}={env!r} is not a concrete backend; "
+                "expected 'xla' or 'pallas'")
+        return env
+    return "pallas" if on_tpu() else "xla"
+
+
+def get_kernels(backend: str = "auto") -> KernelSet:
+    """Resolve ``backend`` and return the interned KernelSet for it.
+
+    Identical requests return the identical object (``lru_cache`` on the
+    resolved name), so frozen-dataclass preconditioners holding a KernelSet
+    stay hashable/equal across transform rebuilds.
+    """
+    return _kernel_set(resolve_backend(backend))
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel_set(resolved: str) -> KernelSet:
+    # imports deferred so merely importing the registry (e.g. for
+    # resolve_backend validation in EngineConfig) stays cheap
+    from repro.kernels.gram import kernel as gram_kernel
+    from repro.kernels.gram import ref as gram_ref
+    from repro.kernels.lowrank import kernel as lowrank_kernel
+    from repro.kernels.lowrank import ref as lowrank_ref
+
+    if resolved == "pallas":
+        interp = interpret_mode()
+        return KernelSet(
+            backend="pallas",
+            gram=functools.partial(gram_kernel.gram_pallas,
+                                   interpret=interp),
+            batched_gram=functools.partial(gram_kernel.batched_gram_pallas,
+                                           interpret=interp),
+            lowrank_apply=functools.partial(
+                lowrank_kernel.lowrank_apply_pallas, interpret=interp),
+            batched_lowrank_apply=functools.partial(
+                lowrank_kernel.batched_lowrank_apply_pallas,
+                interpret=interp),
+        )
+    if resolved != "xla":
+        raise ValueError(f"unresolved backend {resolved!r}")
+    return KernelSet(
+        backend="xla",
+        gram=gram_ref.gram_ref,
+        batched_gram=gram_ref.batched_gram_ref,
+        lowrank_apply=lowrank_ref.lowrank_apply_ref,
+        batched_lowrank_apply=lowrank_ref.batched_lowrank_apply_ref,
+    )

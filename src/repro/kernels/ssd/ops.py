@@ -1,19 +1,18 @@
-"""Jitted public wrapper for the SSD chunk-scan kernel."""
+"""Jitted public wrapper for the SSD chunk-scan kernel.
+
+Interpret-vs-Mosaic comes from the kernel registry's cached platform probe —
+resolved once per process, not re-evaluated per call at trace time.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.ssd.kernel import ssd_pallas
-from repro.kernels.ssd.ref import ssd_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def ssd_scan(u: jnp.ndarray, dlog: jnp.ndarray, Bm: jnp.ndarray,
              Cm: jnp.ndarray, *, chunk: int = 128,
              head_tile: int = 4) -> jnp.ndarray:
     return ssd_pallas(u, dlog, Bm, Cm, chunk=chunk, head_tile=head_tile,
-                      interpret=not _on_tpu())
+                      interpret=registry.interpret_mode())

@@ -27,6 +27,10 @@ def main() -> None:
     p.add_argument("--rank", type=int, default=64)
     p.add_argument("--update-every", type=int, default=10)
     p.add_argument("--block-size", type=int, default=1024)
+    p.add_argument("--kernel-backend", default="auto",
+                   choices=["auto", "xla", "pallas"],
+                   help="optimizer kernel path: grid-over-N Pallas batched "
+                        "kernels vs pure-XLA refs (auto = pallas on TPU)")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=50)
     p.add_argument("--resume", action="store_true")
@@ -52,7 +56,8 @@ def main() -> None:
     opt_cfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
         rank=args.rank, block_size=args.block_size,
-        update_every=args.update_every, weight_decay=1e-4)
+        update_every=args.update_every, weight_decay=1e-4,
+        kernel_backend=args.kernel_backend)
     tx = make_optimizer(opt_cfg)
 
     data = SyntheticLM(DataConfig(

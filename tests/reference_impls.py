@@ -51,19 +51,18 @@ def _graft_direction(g, acc, cfg: SketchyConfig):
     return gn * jax.lax.rsqrt(acc + cfg.graft_eps), acc
 
 
-def _vmapped_fd_update(states: FDState, factors: jnp.ndarray, beta2: float,
-                       gram_fn=None) -> FDState:
-    return jax.vmap(lambda s, a: fd_update(s, a, beta2,
-                                           gram_fn=gram_fn))(states, factors)
+def _vmapped_fd_update(states: FDState, factors: jnp.ndarray,
+                       beta2: float) -> FDState:
+    return jax.vmap(lambda s, a: fd_update(s, a, beta2))(states, factors)
 
 
 def _precondition_blocks(left: FDState, right: FDState, gb: jnp.ndarray,
-                         cfg: SketchyConfig, lowrank_fn=None) -> jnp.ndarray:
+                         cfg: SketchyConfig) -> jnp.ndarray:
     def one(ls, rs, G):
         tmp = fd_apply_inverse_root(ls, G, exponent=cfg.exponent,
-                                    eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
+                                    eps=cfg.matrix_eps)
         tmpT = fd_apply_inverse_root(rs, tmp.T, exponent=cfg.exponent,
-                                     eps=cfg.matrix_eps, lowrank_fn=lowrank_fn)
+                                     eps=cfg.matrix_eps)
         return tmpT.T
 
     return jax.vmap(one)(left, right, gb)

@@ -4,12 +4,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import jax
+
 from repro.kernels.flash.kernel import flash_attention_pallas
 from repro.kernels.flash.ref import attention_ref
-from repro.kernels.gram.kernel import gram_pallas
-from repro.kernels.gram.ref import gram_ref
-from repro.kernels.lowrank.kernel import lowrank_apply_pallas
-from repro.kernels.lowrank.ref import lowrank_apply_ref
+from repro.kernels.gram.kernel import batched_gram_pallas, gram_pallas
+from repro.kernels.gram.ref import batched_gram_ref, gram_ref
+from repro.kernels.lowrank.kernel import (batched_lowrank_apply_pallas,
+                                          lowrank_apply_pallas)
+from repro.kernels.lowrank.ref import (batched_lowrank_apply_ref,
+                                       lowrank_apply_ref)
 
 RNG = np.random.default_rng(0)
 
@@ -27,6 +31,38 @@ def test_gram_sweep(d, k, dtype):
                                atol=tol, rtol=1e-5)
 
 
+# odd pool sizes (N not a multiple of bn_stack), ragged d < bd and k < bk
+@pytest.mark.parametrize("N,d,k,bn_stack", [(1, 16, 4, 1), (3, 20, 6, 2),
+                                            (5, 100, 30, 2), (7, 33, 9, 3),
+                                            (4, 64, 16, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_gram_sweep(N, d, k, bn_stack, dtype):
+    a = jnp.asarray(RNG.normal(size=(N, d, k)), dtype)
+    got = batched_gram_pallas(a, bk=16, bd=32, bn_stack=bn_stack)
+    want = batched_gram_ref(a)
+    # both paths accumulate in f32 whatever the input dtype
+    assert got.dtype == jnp.float32
+    assert want.dtype == jnp.float32
+    assert got.shape == (N, k, k)
+    tol = 1e-4 * np.sqrt(d) * (1 if dtype == jnp.float32 else 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=1e-5)
+
+
+def test_batched_gram_matches_vmapped_single_block():
+    """The grid-over-N kernel == vmap of the single-block kernel (same tiled
+    accumulation order per block), and the batched ref == vmap of the single
+    ref bitwise — the pooled engine's bitwise-parity foundation."""
+    a = jnp.asarray(RNG.normal(size=(5, 48, 12)), jnp.float32)
+    batched = batched_gram_pallas(a, bk=8, bd=16, bn_stack=2)
+    single = jnp.stack([gram_pallas(a[i], bk=8, bd=16)
+                        for i in range(a.shape[0])])
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(single))
+    np.testing.assert_array_equal(
+        np.asarray(batched_gram_ref(a)),
+        np.asarray(jax.vmap(gram_ref)(a)))
+
+
 @pytest.mark.parametrize("d,ell,n", [(32, 4, 8), (64, 16, 64), (123, 17, 50),
                                      (1024, 256, 1024)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -40,6 +76,88 @@ def test_lowrank_sweep(d, ell, n, dtype):
     tol = 1e-4 if dtype == jnp.float32 else 0.08
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=tol)
+
+
+# odd (N, d, ell, n): N ragged against bn_stack, n ragged against bn
+@pytest.mark.parametrize("N,d,ell,n,bn_stack", [(1, 32, 4, 8, 1),
+                                                (3, 24, 6, 10, 2),
+                                                (5, 64, 16, 33, 3),
+                                                (7, 123, 17, 50, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_lowrank_sweep(N, d, ell, n, bn_stack, dtype):
+    u = jnp.asarray(RNG.normal(size=(N, d, ell)), dtype)
+    g = jnp.asarray(RNG.normal(size=(N, d, n)), dtype)
+    coeffs = jnp.asarray(RNG.random((N, ell)), jnp.float32)
+    base = jnp.asarray(RNG.random(N), jnp.float32)
+    got = batched_lowrank_apply_pallas(u, coeffs, base, g, bn=16,
+                                       bn_stack=bn_stack)
+    want = batched_lowrank_apply_ref(u.astype(jnp.float32), coeffs, base,
+                                     g.astype(jnp.float32))
+    # output keeps g's dtype; the two matmuls accumulate in f32 (bf16 error
+    # is output quantization, ~2^-8 relative, not accumulation drift)
+    assert got.dtype == g.dtype
+    assert got.shape == (N, d, n)
+    rtol, atol = (1e-5, 1e-4) if dtype == jnp.float32 else (1e-2, 0.1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+def test_batched_lowrank_matches_vmapped_single_block():
+    N, d, ell, n = 4, 40, 8, 12
+    u = jnp.asarray(RNG.normal(size=(N, d, ell)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(N, d, n)), jnp.float32)
+    coeffs = jnp.asarray(RNG.random((N, ell)), jnp.float32)
+    base = jnp.asarray(RNG.random(N), jnp.float32)
+    batched = batched_lowrank_apply_pallas(u, coeffs, base, g, bn=8,
+                                           bn_stack=2)
+    single = jnp.stack([lowrank_apply_pallas(u[i], coeffs[i], base[i], g[i],
+                                             bn=8) for i in range(N)])
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(single))
+    np.testing.assert_array_equal(
+        np.asarray(batched_lowrank_apply_ref(u, coeffs, base, g)),
+        np.asarray(jax.vmap(lowrank_apply_ref)(u, coeffs, base, g)))
+
+
+def test_public_ops_wrappers_dispatch_pallas():
+    """kernels/*/ops.py are the always-Pallas public entry points (interpret
+    mode resolved once via the registry) — single-block and batched."""
+    from repro.kernels.gram import ops as gram_ops
+    from repro.kernels.lowrank import ops as lowrank_ops
+
+    a = jnp.asarray(RNG.normal(size=(3, 24, 6)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gram_ops.gram(a[0])),
+                               np.asarray(gram_ref(a[0])), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gram_ops.batched_gram(a)),
+                               np.asarray(batched_gram_ref(a)), atol=1e-4)
+    u = jnp.asarray(RNG.normal(size=(3, 24, 4)), jnp.float32)
+    c = jnp.asarray(RNG.random((3, 4)), jnp.float32)
+    b = jnp.asarray(RNG.random(3), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(3, 24, 5)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(lowrank_ops.lowrank_apply(u[0], c[0], b[0], g[0])),
+        np.asarray(lowrank_apply_ref(u[0], c[0], b[0], g[0])), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(lowrank_ops.batched_lowrank_apply(u, c, b, g)),
+        np.asarray(batched_lowrank_apply_ref(u, c, b, g)), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_gram_low_precision_accumulates_in_f32(dtype):
+    """Satellite pin: half-precision inputs hit a f32 accumulator in both the
+    single-block and batched kernels — outputs are f32 and (for a single d
+    tile, where the tiled association matches) bitwise equal to the f32
+    contraction of the rounded inputs."""
+    a1 = jnp.asarray(RNG.normal(size=(24, 6)), dtype)
+    got1 = gram_pallas(a1, bk=8, bd=32)           # d fits one bd tile
+    assert got1.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got1),
+                                  np.asarray(gram_ref(a1)))
+    aN = jnp.asarray(RNG.normal(size=(3, 24, 6)), dtype)
+    gotN = batched_gram_pallas(aN, bk=8, bd=32, bn_stack=2)
+    assert gotN.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(gotN),
+                                  np.asarray(batched_gram_ref(aN)))
 
 
 @pytest.mark.parametrize("B,Hq,Hkv,S,hd,causal", [

@@ -70,11 +70,12 @@ def test_sketchy_converges_on_quadratic():
 
 
 def test_kernel_path_matches_jnp_path():
-    """use_kernels=True (interpret-mode Pallas gram + lowrank) == pure jnp."""
+    """kernel_backend="pallas" (interpret-mode batched Pallas gram + lowrank)
+    == the pure-jnp "xla" backend."""
     loss, params = _quadratic_problem(seed=2)
     cfg = dict(rank=8, block_size=64, beta2=0.99, update_every=1)
-    tx_a = sketchy(SketchyConfig(**cfg, use_kernels=False))
-    tx_b = sketchy(SketchyConfig(**cfg, use_kernels=True))
+    tx_a = sketchy(SketchyConfig(**cfg, kernel_backend="xla"))
+    tx_b = sketchy(SketchyConfig(**cfg, kernel_backend="pallas"))
     sa, sb = tx_a.init(params), tx_b.init(params)
     p = params
     for _ in range(4):
