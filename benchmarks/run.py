@@ -61,6 +61,12 @@ def bench_fig1_memory() -> None:
         ("shampoo", shampoo(ShampooConfig(block_size=1024))),
         ("sketchy_l256", sketchy(SketchyConfig(rank=256, block_size=1024))),
         ("sketchy_l64", sketchy(SketchyConfig(rank=64, block_size=1024))),
+        # quantized pool storage (core/quantize.py): the same sketch state
+        # held in bf16 / per-block int8 between steps
+        ("sketchy_l256_bf16", sketchy(SketchyConfig(
+            rank=256, block_size=1024, second_moment_dtype="bf16"))),
+        ("sketchy_l256_int8", sketchy(SketchyConfig(
+            rank=256, block_size=1024, second_moment_dtype="int8"))),
     ]
     rows = [(name, api.second_moment_bytes(jax.eval_shape(tx.init, params)))
             for name, tx in txs]

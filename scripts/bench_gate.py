@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate for CI.
+
+Compares a fresh ``benchmarks/run.py --json`` output against the committed
+``benchmarks/baseline.json`` and fails (exit 1) when a gated row regresses:
+
+  * ``fig1_memory_*`` — the paper's headline quantity.  Gated on the byte
+    count parsed from the derived column; ANY increase is a regression
+    (memory accounting is exact, not noisy).
+  * ``opt_step_time_*`` — wall-time rows.  Gated on ``us_per_call`` with a
+    multiplicative tolerance (default 1.75x) because shared CI runners are
+    noisy; tighten locally with ``--time-tolerance``.
+
+Rows present in only one of the two files are reported but not fatal — the
+benchmark set grows PR over PR and the baseline is refreshed when it does.
+
+Usage:
+  python benchmarks/run.py --json /tmp/bench.json
+  python scripts/bench_gate.py /tmp/bench.json \
+      [--baseline benchmarks/baseline.json] [--time-tolerance 1.75]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_BYTES = re.compile(r"^(\d+)B\b")
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def _bytes_of(row: dict):
+    m = _BYTES.match(row.get("derived", ""))
+    return int(m.group(1)) if m else None
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("fresh", help="JSON from `benchmarks/run.py --json`")
+    p.add_argument("--baseline", default="benchmarks/baseline.json")
+    p.add_argument("--time-tolerance", type=float, default=1.75,
+                   help="max allowed us_per_call ratio vs baseline for "
+                        "opt_step_time_* rows")
+    args = p.parse_args(argv)
+
+    base = _rows(args.baseline)
+    fresh = _rows(args.fresh)
+
+    failures, notes = [], []
+    for name in sorted(set(base) | set(fresh)):
+        if name not in fresh:
+            notes.append(f"row {name!r} missing from fresh run")
+            continue
+        if name not in base:
+            notes.append(f"new row {name!r} (not in baseline)")
+            continue
+        b, f = base[name], fresh[name]
+        if name.startswith("fig1_memory_"):
+            bb, fb = _bytes_of(b), _bytes_of(f)
+            if bb is None or fb is None:
+                failures.append(f"{name}: unparseable bytes "
+                                f"({b['derived']!r} vs {f['derived']!r})")
+            elif fb > bb:
+                failures.append(
+                    f"{name}: second-moment bytes regressed {bb} -> {fb}")
+        elif name.startswith("opt_step_time"):
+            ratio = f["us_per_call"] / max(b["us_per_call"], 1e-9)
+            if ratio > args.time_tolerance:
+                failures.append(
+                    f"{name}: {f['us_per_call']:.1f}us vs baseline "
+                    f"{b['us_per_call']:.1f}us ({ratio:.2f}x > "
+                    f"{args.time_tolerance}x)")
+
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\nBENCH GATE FAILED ({len(failures)} regressions):")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"bench gate OK: {len(set(base) & set(fresh))} rows compared, "
+          "no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,11 @@
 #                                             (interpret mode) vs refs,
 #                                             backend registry, and the
 #                                             pool-parity pins
+#   scripts/check.sh quant [extra args]       quantized second-moment pools
+#                                             (fp32 parity, int8/bf16,
+#                                             cross-dtype checkpoints)
+# Extra pytest args reach EVERY pytest invocation of the chosen tier,
+# including the kernels tier that the full tier runs first.
 # All tiers run a compileall syntax gate first so breakage surfaces before
 # pytest collection.
 set -euo pipefail
@@ -26,9 +31,21 @@ kernels_tier() {
     "$@"
 }
 
+quant_tier() {
+  # quantized pool storage: fp32 bitwise pin, int8 round-trip property
+  # tests, bf16 convergence tolerance, cross-dtype checkpoint migration
+  python -m pytest -x -q tests/test_quantize.py "$@"
+}
+
 if [[ "${1:-}" == "kernels" ]]; then
   shift
   kernels_tier "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "quant" ]]; then
+  shift
+  quant_tier "$@"
   exit 0
 fi
 
@@ -46,7 +63,7 @@ if [[ "${1:-}" == "fast" ]]; then
 fi
 
 echo "--- kernels tier (batched Pallas vs refs + pool-parity pins) ---"
-kernels_tier
+kernels_tier "$@"
 
 # rest of tier-1; the kernels-tier files already ran above, skip re-running
 # the interpret-mode Pallas sweeps (test_pool re-runs only its one pin)

@@ -50,7 +50,7 @@ from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checka
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocking, pool
+from repro.core import blocking, pool, quantize
 from repro.core.transform import GradientTransformation
 from repro.kernels import registry as kernel_registry
 
@@ -238,6 +238,12 @@ class EngineConfig:
     # refs), or "auto" (pallas on TPU, xla elsewhere; REPRO_KERNEL_BACKEND
     # overrides the platform default).  Resolved once at transform build.
     kernel_backend: str = "auto"
+    # Storage dtype for the pooled second-moment stacks BETWEEN steps
+    # (core/quantize.py): "fp32" (identity, bitwise parity), "bf16" (2x), or
+    # "int8" (per-block symmetric quantization of the matrix factors, ~4x).
+    # Compute always dequantizes to f32 at the batched-method boundary, so
+    # kernels and Preconditioner implementations never see quantized arrays.
+    second_moment_dtype: str = "fp32"
     state_dtype: Any = jnp.float32
     # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
     # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
@@ -253,6 +259,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown kernel_backend {self.kernel_backend!r}; "
                 f"expected one of {kernel_registry.BACKENDS}")
+        if self.second_moment_dtype not in quantize.SECOND_MOMENT_DTYPES:
+            raise ValueError(
+                f"unknown second_moment_dtype {self.second_moment_dtype!r}; "
+                f"expected one of {quantize.SECOND_MOMENT_DTYPES}")
 
 
 class LeafState(NamedTuple):
@@ -274,14 +284,16 @@ class PrecondState(NamedTuple):
 
 
 def pool_stats(state: PrecondState, key: Optional[str] = None) -> Any:
-    """Untagged stats stack for one pool group (default: the only group)."""
+    """Untagged f32 stats stack for one pool group (default: the only
+    group).  Quantized storage (core/quantize.py) is dequantized, so callers
+    always see the compute-layout tree regardless of second_moment_dtype."""
     if key is None:
         if len(state.pools) != 1:
             raise ValueError(
                 f"state has {len(state.pools)} pools {sorted(state.pools)}; "
                 "pass an explicit key")
         key = next(iter(state.pools))
-    return untag(state.pools[key])
+    return quantize.dequantize_pool(state.pools[key])
 
 
 def graft_direction(g: jnp.ndarray, acc: jnp.ndarray, *, graft: str,
@@ -351,6 +363,7 @@ def scale_by_preconditioner(precond: Preconditioner,
     gating) stays leafwise.
     """
     diag_eps = cfg.graft_eps if cfg.diag_eps is None else cfg.diag_eps
+    qdtype = cfg.second_moment_dtype
     precond = _inject_kernels(precond,
                               kernel_registry.get_kernels(cfg.kernel_backend))
     update_stats_b = _batched_method(precond, "update_stats")
@@ -377,9 +390,12 @@ def scale_by_preconditioner(precond: Preconditioner,
         pools = {}
         for grp in index.groups:
             base = precond.init_block(grp.info)
-            pools[grp.key] = jax.tree.map(
+            stacked = jax.tree.map(
                 lambda x, n=grp.num_blocks:
                     jnp.broadcast_to(x, (n,) + x.shape), base)
+            # storage layout: quantized between steps (deterministic at init
+            # — the stats are zeros/identity, nothing to dither)
+            pools[grp.key] = quantize.quantize_pool(stacked, qdtype)
         leaves = []
         for i, (p, plan) in enumerate(zip(flat, index.leaves)):
             if plan.group is None:
@@ -452,14 +468,24 @@ def scale_by_preconditioner(precond: Preconditioner,
         # One update/refresh/precondition dispatch per SHAPE GROUP — the
         # whole model's same-shaped blocks in one batched call each, straight
         # into the implementation's batched (kernel-backed) entry points.
+        # Pools are stored quantized (cfg.second_moment_dtype) between steps:
+        # dequantize to f32 at this boundary, requantize the result.  For
+        # fp32 both transforms are exactly untag/tag_like (bitwise parity).
+        qkey = None
+        if qdtype == "int8":
+            # stochastic requantization keyed by step: unbiased across the
+            # repeated quantize-accumulate cycle of the EMA statistics
+            qkey = jax.random.fold_in(jax.random.PRNGKey(0x0517), count)
         new_pools, pooled_dirs = {}, {}
-        for grp in index.groups:
+        for gi, grp in enumerate(index.groups):
             gb = packed[grp.key]
-            raw = untag(state.pools[grp.key])
+            raw = quantize.dequantize_pool(state.pools[grp.key])
             raw = update_stats_b(raw, gb, count)
             raw = refresh_group(grp, raw, gb, count)
             pooled_dirs[grp.key] = precondition_b(raw, gb, count)
-            new_pools[grp.key] = tag_like(state.pools[grp.key], raw)
+            gkey = None if qkey is None else jax.random.fold_in(qkey, gi)
+            new_pools[grp.key] = quantize.requantize_pool(
+                state.pools[grp.key], raw, key=gkey)
 
         # Per-leaf residue: diag fallback, grafting norms, gating.
         out, new_leaves = [], []

@@ -49,6 +49,11 @@ class OptimizerConfig:
     # diagonal-fallback damping for vector/scalar leaves; None keeps the
     # historical graft_eps coupling (seed parity).
     diag_eps: Optional[float] = None
+    # storage dtype for pooled second-moment stacks between steps
+    # (core/quantize.py): "fp32" (bitwise parity) | "bf16" (2x) | "int8"
+    # (per-block symmetric quantization of the matrix factors, ~4x).
+    # Applies to sketchy and shampoo; adam's elementwise state is untouched.
+    second_moment_dtype: str = "fp32"
 
 
 def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
@@ -58,14 +63,16 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
-            kernel_backend=cfg.kernel_backend))
+            kernel_backend=cfg.kernel_backend,
+            second_moment_dtype=cfg.second_moment_dtype))
     if cfg.name == "shampoo":
         return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
             block_size=cfg.block_size, beta2=beta2,
             root_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
-            kernel_backend=cfg.kernel_backend))
+            kernel_backend=cfg.kernel_backend,
+            second_moment_dtype=cfg.second_moment_dtype))
     if cfg.name == "adam":
         return adam_lib.adam(adam_lib.AdamConfig(
             beta1=cfg.beta1, beta2=beta2))

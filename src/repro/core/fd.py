@@ -69,8 +69,13 @@ def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
         new_factor = new_factor[:, None]
     compute_dtype = jnp.promote_types(U.dtype, jnp.float32)
 
-    # M = [sqrt(beta2) * B, A] where B = U diag(sqrt(s)).
-    B = U.astype(compute_dtype) * jnp.sqrt(beta2 * s.astype(compute_dtype))[None, :]
+    # M = [sqrt(beta2) * B, A] where B = U diag(sqrt(s)).  The eigenvalue
+    # ladder is non-negative by construction, so the clamp is a bitwise
+    # no-op in fp32 — it only guards sqrt(negative) -> NaN when quantized
+    # state storage (core/quantize.py) or a lossy checkpoint restore
+    # perturbs s below zero.
+    s_clamped = jnp.maximum(beta2 * s.astype(compute_dtype), 0.0)
+    B = U.astype(compute_dtype) * jnp.sqrt(s_clamped)[None, :]
     M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=1)  # (d, ell+r)
 
     if kernels is None:
@@ -115,8 +120,10 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
         new_factor = new_factor[..., None]
     compute_dtype = jnp.promote_types(U.dtype, jnp.float32)
 
-    B = U.astype(compute_dtype) \
-        * jnp.sqrt(beta2 * s.astype(compute_dtype))[:, None, :]
+    # non-negative clamp mirrors fd_update: free in fp32, NaN guard under
+    # quantized storage
+    s_clamped = jnp.maximum(beta2 * s.astype(compute_dtype), 0.0)
+    B = U.astype(compute_dtype) * jnp.sqrt(s_clamped)[:, None, :]
     M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=2)
 
     if kernels is None:

@@ -1,0 +1,179 @@
+"""Pool-level quantized storage for second-moment optimizer state.
+
+Sketchy's pitch is sub-linear second-moment memory (dk instead of d^2);
+this module compresses exactly that state further by storing the packed
+``(N, bs_m, bs_n)`` pool stacks (core/pool.py) in low precision *between*
+steps.  Compute stays f32: the engine dequantizes at the
+``update_stats_batched / refresh_batched / precondition_batched`` boundary
+and re-quantizes the result, so the kernel registry and every
+Preconditioner implementation are untouched.
+
+Three storage modes (``EngineConfig.second_moment_dtype``):
+
+  * ``"fp32"`` — identity.  Bitwise-identical to the unquantized engine
+    (pinned in tests/test_quantize.py against tests/reference_impls.py).
+  * ``"bf16"`` — every second-moment leaf cast to bfloat16 (2x).
+  * ``"int8"`` — per-block symmetric int8: each block's matrix factors
+    (FD eigenvector stacks, Shampoo L/R Grams — the O(d*ell) / O(d^2)
+    terms of the paper's Fig. 1 budget) are stored as int8 values plus one
+    fp32 absmax scale per block (~4x).  Per-block *vectors and scalars*
+    (the FD eigenvalue ladder, escaped mass rho) stay fp32: they are
+    O(ell) of the budget, and the deflation invariant ``s[-1] == 0`` plus
+    the ``rho * I`` compensation do not survive rounding noise.
+
+The int8 container is ``QuantizedPool(values, scale)`` — a plain NamedTuple
+pytree whose fields are individually ``Tagged`` (core/api.py) with the
+original leaf's ``StateMeta``.  Because each Tagged node still wraps exactly
+one array, every metadata-driven consumer works unchanged:
+``api.second_moment_bytes`` reports the *compressed* footprint (int8 values
++ fp32 scales), ``trainer.train_state_shardings`` shards the scale stack's
+leading ``N`` dim alongside its values (sharding/rules.blocks_sharding),
+and ``train/checkpoint.py`` manifests both leaves (with a cross-dtype
+migration shim for restoring fp32 checkpoints into int8 runs and back).
+
+The scale/round core (absmax -> int8 range, stochastic rounding for
+unbiased repeated quantize-accumulate cycles) is shared with the int8
+gradient all-reduce in ``train/compression.py`` — one rounding rule for
+state at rest and gradients in flight.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+
+SECOND_MOMENT_DTYPES = ("fp32", "bf16", "int8")
+
+_INT8_MAX = 127.0
+
+
+class QuantizedPool(NamedTuple):
+    """One int8-quantized pool stack: integer values + per-block fp32 scale.
+
+    In engine state both fields are ``Tagged`` with the source leaf's
+    ``StateMeta`` (role="second_moment", blocked=True); ``scale`` keeps the
+    leading blocks dim (``(N, 1, ..., 1)``) so it shards alongside
+    ``values`` and broadcasts in ``dequantize_stack``.
+    """
+    values: Any
+    scale: Any
+
+
+def _is_node(x) -> bool:
+    return isinstance(x, (QuantizedPool, api.Tagged))
+
+
+# ---------------------------------------------------------------------------
+# Shared scale/round core (also used by train/compression.py's int8 psum)
+
+
+def int8_scale(absmax: jnp.ndarray) -> jnp.ndarray:
+    """absmax -> fp32 scale mapping ``|x| <= absmax`` onto the int8 range."""
+    return jnp.where(absmax > 0, absmax / _INT8_MAX, 1.0)
+
+
+def round_int8(scaled: jnp.ndarray, key=None) -> jnp.ndarray:
+    """Round pre-scaled values to int8.
+
+    With a PRNG ``key`` the rounding is stochastic (unbiased under repeated
+    quantize-accumulate cycles — EMA statistics, compressed all-reduce);
+    without it, round-to-nearest (deterministic restores).  Either way an
+    already-integer input is a fixed point, so re-quantizing an unchanged
+    dequantized stack does not random-walk the state.
+    """
+    if key is not None:
+        noise = jax.random.uniform(key, scaled.shape, jnp.float32) - 0.5
+        scaled = scaled + noise
+    return jnp.clip(jnp.round(scaled), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+
+
+def quantize_stack(x: jnp.ndarray, *, key=None) -> QuantizedPool:
+    """``(N, ...)`` float stack -> int8 values + one fp32 scale per block."""
+    x32 = x.astype(jnp.float32)
+    axes = tuple(range(1, x32.ndim))
+    absmax = jnp.max(jnp.abs(x32), axis=axes, keepdims=True)
+    scale = int8_scale(absmax)
+    return QuantizedPool(values=round_int8(x32 / scale, key), scale=scale)
+
+
+def dequantize_stack(values: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return values.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Pool-level storage transform
+
+
+def _int8_eligible(meta: api.StateMeta, value) -> bool:
+    """int8 covers the per-block *matrix* factors (ndim >= 3 with the pool
+    dim) — see module docstring for why vectors/scalars stay fp32."""
+    return meta.role == "second_moment" and value.ndim >= 3
+
+
+def quantize_pool(stats: Any, dtype: str, *, key=None) -> Any:
+    """Tagged stats tree (one pool stack) -> its storage-layout tree."""
+    if dtype == "fp32":
+        return stats
+    if dtype == "bf16":
+        return api.map_with_meta(
+            lambda meta, v: v.astype(jnp.bfloat16)
+            if meta is not None and meta.role == "second_moment" else v,
+            stats)
+    if dtype != "int8":
+        raise ValueError(f"unknown second_moment_dtype {dtype!r}; expected "
+                         f"one of {SECOND_MOMENT_DTYPES}")
+
+    flat, treedef = jax.tree.flatten(stats, is_leaf=_is_node)
+    out = []
+    for i, x in enumerate(flat):
+        if isinstance(x, api.Tagged) and _int8_eligible(x.meta, x.value):
+            sub = None if key is None else jax.random.fold_in(key, i)
+            qp = quantize_stack(x.value, key=sub)
+            out.append(QuantizedPool(values=api.Tagged(qp.values, x.meta),
+                                     scale=api.Tagged(qp.scale, x.meta)))
+        else:
+            out.append(x)
+    return jax.tree.unflatten(treedef, out)
+
+
+def dequantize_pool(stats: Any) -> Any:
+    """Storage-layout tree -> plain untagged f32 compute tree.
+
+    The engine calls this at the batched-method boundary; for an all-fp32
+    tree it is exactly ``api.untag`` (the f32->f32 cast is a no-op), keeping
+    the default path bitwise-identical.
+    """
+    def one(x):
+        if isinstance(x, QuantizedPool):
+            return dequantize_stack(api.untag(x.values), api.untag(x.scale))
+        if isinstance(x, api.Tagged):
+            if x.meta.role == "second_moment":
+                return x.value.astype(jnp.float32)
+            return x.value
+        return x
+    return jax.tree.map(one, stats, is_leaf=_is_node)
+
+
+def requantize_pool(template: Any, raw: Any, *, key=None) -> Any:
+    """Computed f32 tree -> storage layout, with tags/containers from
+    ``template`` (the previous state).  ``raw`` must be the dequantized
+    structure — each QuantizedPool/Tagged node position holds one array.
+    """
+    flat_t, treedef = jax.tree.flatten(template, is_leaf=_is_node)
+    flat_r = treedef.flatten_up_to(raw)
+    out = []
+    for i, (t, r) in enumerate(zip(flat_t, flat_r)):
+        if isinstance(t, QuantizedPool):
+            sub = None if key is None else jax.random.fold_in(key, i)
+            qp = quantize_stack(r, key=sub)
+            out.append(QuantizedPool(
+                values=api.Tagged(qp.values, t.values.meta),
+                scale=api.Tagged(qp.scale, t.scale.meta)))
+        elif isinstance(t, api.Tagged):
+            out.append(api.Tagged(r.astype(t.value.dtype), t.meta))
+        else:
+            out.append(r)
+    return jax.tree.unflatten(treedef, out)

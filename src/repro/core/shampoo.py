@@ -41,6 +41,9 @@ class ShampooConfig:
     state_dtype: Any = jnp.float32
     # kernel backend for the pooled stat-update Grams: "pallas"|"xla"|"auto"
     kernel_backend: str = "auto"
+    # storage dtype for the pooled L/R statistics between steps
+    # (core/quantize.py): "fp32" (bitwise parity) | "bf16" | "int8"
+    second_moment_dtype: str = "fp32"
 
 
 class ShampooBlockStats(NamedTuple):
@@ -140,6 +143,7 @@ def shampoo(cfg: ShampooConfig = ShampooConfig()) -> GradientTransformation:
             graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
             refresh_schedule=cfg.refresh_schedule,
             kernel_backend=cfg.kernel_backend,
+            second_moment_dtype=cfg.second_moment_dtype,
             state_dtype=cfg.state_dtype))
 
 

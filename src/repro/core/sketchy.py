@@ -53,6 +53,9 @@ class SketchyConfig:
     # kernel backend for the pooled hot path (engine-resolved KernelSet):
     # "pallas" | "xla" | "auto" — replaces the old private use_kernels flag
     kernel_backend: str = "auto"
+    # storage dtype for the pooled FD sketches between steps
+    # (core/quantize.py): "fp32" (bitwise parity) | "bf16" | "int8"
+    second_moment_dtype: str = "fp32"
 
 
 class SketchyBlockStats(NamedTuple):
@@ -143,6 +146,7 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
             graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
             refresh_schedule=cfg.refresh_schedule,
             kernel_backend=cfg.kernel_backend,
+            second_moment_dtype=cfg.second_moment_dtype,
             state_dtype=cfg.state_dtype))
 
 

@@ -31,6 +31,12 @@ def main() -> None:
                    choices=["auto", "xla", "pallas"],
                    help="optimizer kernel path: grid-over-N Pallas batched "
                         "kernels vs pure-XLA refs (auto = pallas on TPU)")
+    p.add_argument("--second-moment-dtype", default="fp32",
+                   choices=["fp32", "bf16", "int8"],
+                   help="storage dtype for pooled second-moment stacks "
+                        "between steps (core/quantize.py): fp32 = bitwise "
+                        "parity, bf16 = 2x smaller, int8 = per-block "
+                        "quantized matrix factors (~4x); compute stays f32")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=50)
     p.add_argument("--resume", action="store_true")
@@ -57,7 +63,8 @@ def main() -> None:
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
         rank=args.rank, block_size=args.block_size,
         update_every=args.update_every, weight_decay=1e-4,
-        kernel_backend=args.kernel_backend)
+        kernel_backend=args.kernel_backend,
+        second_moment_dtype=args.second_moment_dtype)
     tx = make_optimizer(opt_cfg)
 
     data = SyntheticLM(DataConfig(

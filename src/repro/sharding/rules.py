@@ -203,7 +203,14 @@ def blocks_sharding(rules: MeshRules, leaf) -> NamedSharding:
     product almost always divides it and FD refresh shards over the whole
     mesh.  Model-major matches the expert-major flattening of EP-sharded
     parameters, keeping the grad->block re-layout local (EXPERIMENTS.md
-    §Perf, kimi iteration 3)."""
+    §Perf, kimi iteration 3).
+
+    Quantized pools (core/quantize.py) route both halves of a
+    ``QuantizedPool`` through here: the int8 ``values`` stack
+    ``(N, bs_m, bs_n)`` and its fp32 ``scale`` stack ``(N, 1, ..., 1)``
+    share the same leading ``N``, so they land on the same leading-dim
+    sharding decision and every device holds the scales for exactly the
+    blocks it owns (dequantize is shard-local, no gather)."""
     ndim = leaf.ndim
     if not ndim:
         return NamedSharding(rules.mesh, P())

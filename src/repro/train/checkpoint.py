@@ -24,6 +24,15 @@ into shape-grouped pools at ``...::pools::<bs_m>x<bs_n>::<...>``.
 ``restore`` detects the old layout and re-packs it on the fly (leaf order ==
 pool pack order, so migration is pure concatenation) — no re-warmup of
 second-moment state on upgrade.
+
+Quantized-state migration: pools stored under a different
+``second_moment_dtype`` (core/quantize.py) than the restore template are
+converted on the fly — an fp32/bf16 checkpoint restores into an int8 run by
+quantizing each stack (deterministic round-to-nearest: restores are
+reproducible), and an int8 checkpoint restores into an fp32/bf16 run by
+dequantizing ``values * scale``.  Same-structure dtype changes (fp32 <->
+bf16) are a plain cast in the main restore path, which also reinterprets
+bfloat16 leaves that ``np.load`` hands back as raw void (``|V2``) arrays.
 """
 from __future__ import annotations
 
@@ -120,8 +129,37 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _load_rec(path: str, rec: dict) -> np.ndarray:
+    """Load one manifest record, restoring dtypes ``np.save`` round-trips as
+    raw void bytes (bfloat16 -> ``|V2``) via the recorded dtype string."""
+    arr = np.load(os.path.join(path, rec["file"]))
+    if arr.dtype.kind == "V":
+        arr = arr.view(np.dtype(rec["dtype"]))
+    return arr
+
+
+def _is_floatlike(dt: np.dtype) -> bool:
+    return dt.kind == "f" or dt.name == "bfloat16"
+
+
+def _cast_to_template(arr: np.ndarray, tmpl) -> np.ndarray:
+    """Cast a loaded float leaf onto the template's float dtype (fp32 <->
+    bf16 restores); non-float or matching dtypes pass through untouched."""
+    tdt = np.dtype(tmpl.dtype)
+    if arr.dtype != tdt and _is_floatlike(arr.dtype) and _is_floatlike(tdt):
+        return np.asarray(jax.numpy.asarray(arr).astype(tdt))
+    return arr
+
+
 _PRE_POOL_STATS = re.compile(r"^(.*)\.leaves::(\d+)::\.stats::(.+)$")
 _POOL_LEAF = re.compile(r"^(.*)\.pools::(\d+x\d+)::(.+)$")
+
+# Tagged leaf path suffixes for the quantized-pool container
+# (core/quantize.py): an fp32/bf16 stack lives at ``<base>::.value``; its
+# int8 form splits into ``<base>::.values::.value`` + ``<base>::.scale::.value``.
+_QP_VALUES = "::.values::.value"
+_QP_SCALE = "::.scale::.value"
+_TAGGED = "::.value"
 
 
 def _migrate_pre_pool(path: str, manifest: dict, named: list,
@@ -180,8 +218,7 @@ def _migrate_pre_pool(path: str, manifest: dict, named: list,
             assign[matches[0]].append(j)
         for key, leaf_ids in assign.items():
             for sfx, (i, shp) in groups[key].items():
-                parts = [np.load(os.path.join(path,
-                                              members[j][sfx]["file"]))
+                parts = [_load_rec(path, members[j][sfx])
                          for j in leaf_ids]
                 consumed.update(members[j][sfx]["name"] for j in leaf_ids)
                 arr = parts[0] if len(parts) == 1 \
@@ -211,12 +248,106 @@ def _migrate_pre_pool(path: str, manifest: dict, named: list,
                 f"state-role mismatch at {name}: checkpoint has "
                 f"{rec_meta['role']!r}, template expects {meta['role']!r}")
         consumed.add(name)
-        leaves.append(np.load(os.path.join(path, rec["file"])))
+        leaves.append(_load_rec(path, rec))
     leftover = set(recs) - consumed
     if leftover:
         raise ValueError(
             f"pre-pool migration: {len(leftover)} checkpoint leaves were not "
             f"consumed (e.g. {sorted(leftover)[:3]}) — incompatible states")
+    return leaves
+
+
+def _migrate_quantized(path: str, manifest: dict, named: list,
+                       metas: list) -> Optional[list]:
+    """Convert pool stacks across ``second_moment_dtype`` layouts.
+
+    Handles both directions of the int8 structural change: a template leaf
+    pair ``<base>::.values::.value`` / ``<base>::.scale::.value`` fed from a
+    checkpointed ``<base>::.value`` stack (quantize on load, deterministic
+    rounding), and a template ``<base>::.value`` fed from a checkpointed
+    values/scale pair (dequantize on load).  Leaves whose names match
+    exactly load as usual (with fp32<->bf16 casting).  Returns arrays
+    aligned with the template flatten order, or ``None`` when no
+    quantization-layout rename is involved (so unrelated mismatches keep
+    their original error messages).
+    """
+    from repro.core import quantize
+
+    recs = {r["name"]: r for r in manifest["leaves"]}
+    names = [n for n, _ in named]
+    involved = False
+    for name in names:
+        if name in recs:
+            continue
+        if name.endswith(_QP_VALUES) or name.endswith(_QP_SCALE):
+            base = name[:-len(_QP_VALUES)] if name.endswith(_QP_VALUES) \
+                else name[:-len(_QP_SCALE)]
+            involved |= (base + _TAGGED) in recs
+        elif name.endswith(_TAGGED):
+            base = name[:-len(_TAGGED)]
+            involved |= (base + _QP_VALUES) in recs
+    if not involved:
+        return None
+
+    def check_role(name, meta, rec):
+        rec_meta = rec.get("meta")
+        if meta is not None and rec_meta is not None \
+                and rec_meta["role"] != meta["role"]:
+            raise ValueError(
+                f"state-role mismatch at {name}: checkpoint has "
+                f"{rec_meta['role']!r}, template expects {meta['role']!r}")
+
+    dequant_cache: dict = {}    # base -> dequantized fp32 np array
+    quant_cache: dict = {}      # base -> (values int8, scale fp32) np arrays
+
+    def quantized(base, name, meta):
+        if base not in quant_cache:
+            rec = recs[base + _TAGGED]
+            check_role(name, meta, rec)
+            src = np.asarray(jax.numpy.asarray(_load_rec(path, rec))
+                             .astype(jax.numpy.float32))
+            qp = quantize.quantize_stack(jax.numpy.asarray(src))
+            quant_cache[base] = (np.asarray(qp.values), np.asarray(qp.scale))
+            consumed.add(rec["name"])
+        return quant_cache[base]
+
+    consumed: set = set()
+    leaves = []
+    for (name, tmpl), meta in zip(named, metas):
+        if name in recs:
+            rec = recs[name]
+            check_role(name, meta, rec)
+            consumed.add(name)
+            leaves.append(_cast_to_template(_load_rec(path, rec), tmpl))
+            continue
+        if name.endswith(_QP_VALUES):
+            leaves.append(quantized(name[:-len(_QP_VALUES)], name, meta)[0])
+            continue
+        if name.endswith(_QP_SCALE):
+            leaves.append(quantized(name[:-len(_QP_SCALE)], name, meta)[1])
+            continue
+        if name.endswith(_TAGGED):
+            base = name[:-len(_TAGGED)]
+            vrec = recs.get(base + _QP_VALUES)
+            srec = recs.get(base + _QP_SCALE)
+            if vrec is not None and srec is not None:
+                check_role(name, meta, vrec)
+                if base not in dequant_cache:
+                    v = _load_rec(path, vrec).astype(np.float32)
+                    dequant_cache[base] = v * _load_rec(path, srec)
+                consumed.update((vrec["name"], srec["name"]))
+                leaves.append(_cast_to_template(dequant_cache[base], tmpl))
+                continue
+        raise ValueError(
+            f"quantized-state migration: template leaf {name!r} has no "
+            "source in the checkpoint (neither an exact match nor a "
+            "convertible quantized/unquantized counterpart)")
+    leftover = set(recs) - consumed
+    if leftover:
+        raise ValueError(
+            f"quantized-state migration: {len(leftover)} checkpoint leaves "
+            f"were not consumed (e.g. {sorted(leftover)[:3]}) — "
+            "incompatible states")
     return leaves
 
 
@@ -235,6 +366,8 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
     metas = _meta_records(template)
     if [n for n, _ in named] != [r["name"] for r in manifest["leaves"]]:
         migrated = _migrate_pre_pool(path, manifest, named, metas)
+        if migrated is None:
+            migrated = _migrate_quantized(path, manifest, named, metas)
         if migrated is not None:
             sh_flat = (jax.tree.leaves(
                 shardings,
@@ -265,7 +398,7 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
             raise ValueError(
                 f"state-role mismatch at {name}: checkpoint has "
                 f"{rec_meta['role']!r}, template expects {meta['role']!r}")
-        arr = np.load(os.path.join(path, rec["file"]))
+        arr = _cast_to_template(_load_rec(path, rec), tmpl)
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:

@@ -8,7 +8,9 @@ all-reduce bytes at <0.4% relative error (tests/test_compression.py).
 This is the paper-adjacent distributed-optimization trick (Sketchy shrinks
 optimizer *state*; this shrinks optimizer *traffic*), exposed as an optional
 wrapper around the gradient computation for pure-DP (non-FSDP) runs where
-gradients are all-reduced rather than reduce-scattered by GSPMD.
+gradients are all-reduced rather than reduce-scattered by GSPMD.  The
+scale/round core (absmax -> int8 range, stochastic rounding) is shared with
+the pool-level second-moment quantization in ``core/quantize.py``.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import quantize
 from repro.sharding.rules import shard_map
 
 PyTree = Any
@@ -29,11 +32,10 @@ def _quantized_psum(g: jnp.ndarray, axes: Sequence[str], key) -> jnp.ndarray:
     absmax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axes[0])
     for a in axes[1:]:
         absmax = jax.lax.pmax(absmax, a)
-    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    scaled = g32 / scale
-    # stochastic rounding keeps the compressed all-reduce unbiased
-    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
-    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    # shared core (core/quantize.py): absmax -> int8 scale, stochastic
+    # rounding keeps the compressed all-reduce unbiased
+    scale = quantize.int8_scale(absmax)
+    q = quantize.round_int8(g32 / scale, key)
     summed = q.astype(jnp.int32)
     for a in axes:
         summed = jax.lax.psum(summed, a)

@@ -1,0 +1,326 @@
+"""Quantized second-moment pools (core/quantize.py): fp32 bitwise parity
+with the unquantized engine, int8 round-trip error bounds (property test),
+compressed memory accounting, bf16 convergence tolerance on a
+paper_lm_100m-shaped run, cross-dtype checkpoint migration, and scale-array
+sharding co-location."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
+
+import reference_impls as ref
+from repro.core import api, pool, quantize
+from repro.core.shampoo import ShampooConfig, ShampooPreconditioner
+from repro.core.sketchy import SketchyConfig, SketchyPreconditioner, sketchy
+
+
+def _params(seed=0):
+    """Matrix, vector (diag fallback), and shape-duplicate leaves."""
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    return {"m": mk(48, 20), "v": mk(10), "b": mk(70, 30), "m2": mk(48, 20)}
+
+
+def _grad(seed):
+    return _params(seed + 100)
+
+
+def _engines(name, qdtype):
+    if name == "sketchy":
+        precond = SketchyPreconditioner(
+            SketchyConfig(rank=8, block_size=32, beta2=0.99, update_every=2))
+        ecfg = api.EngineConfig(block_size=32, beta2=0.99, update_every=2,
+                                second_moment_dtype=qdtype)
+    else:
+        precond = ShampooPreconditioner(
+            ShampooConfig(block_size=32, beta2=0.99, root_every=2))
+        ecfg = api.EngineConfig(block_size=32, beta2=0.99, update_every=2,
+                                second_moment_dtype=qdtype)
+    return precond, ecfg
+
+
+# -------------------------------------------------------- fp32 bitwise parity
+
+
+@pytest.mark.parametrize("name", ["sketchy", "shampoo"])
+def test_fp32_storage_bitwise_matches_reference(name):
+    """Acceptance criterion: second_moment_dtype="fp32" (the default) stays
+    BITWISE identical to the pre-quantization engine, pinned against the
+    frozen per-leaf engine in tests/reference_impls.py."""
+    precond, ecfg = _engines(name, "fp32")
+    params = _params()
+    new_tx = api.scale_by_preconditioner(precond, ecfg)
+    old_tx = ref.per_leaf_scale_by_preconditioner(precond, ecfg)
+    s_new, s_old = new_tx.init(params), old_tx.init(params)
+    for t in range(5):
+        g = _grad(t)
+        u_new, s_new = new_tx.update(g, s_new, params)
+        u_old, s_old = old_tx.update(g, s_old, params)
+        for a, b in zip(jax.tree.leaves(u_new), jax.tree.leaves(u_old)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fp32_state_structure_unchanged():
+    """fp32 storage introduces no QuantizedPool containers — checkpoints and
+    shardings of existing runs are untouched."""
+    tx = sketchy(SketchyConfig(rank=8, block_size=32))
+    state = tx.init(_params())
+    for x in jax.tree.leaves(state,
+                             is_leaf=lambda v: isinstance(v,
+                                                          quantize.QuantizedPool)):
+        assert not isinstance(x, quantize.QuantizedPool)
+
+
+# ----------------------------------------------------- int8 round-trip bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    d=st.integers(1, 24),
+    k=st.integers(1, 8),
+    log_scale=st.integers(-12, 12),
+    stochastic=st.sampled_from([False, True]),
+)
+def test_int8_roundtrip_error_bound(n, d, k, log_scale, stochastic):
+    """Per-element |dequant(quant(x)) - x| <= per-block scale (stochastic
+    rounding moves at most one quantization step; deterministic at most
+    half), across magnitudes and block shapes.  Zero blocks are exact."""
+    rng = np.random.default_rng(n * 1000 + d * 10 + k)
+    x = rng.normal(size=(n, d, k)).astype(np.float32) * (2.0 ** log_scale)
+    x[0] = 0.0  # always include an all-zero block
+    key = jax.random.PRNGKey(7) if stochastic else None
+    qp = quantize.quantize_stack(jnp.asarray(x), key=key)
+    assert qp.values.dtype == jnp.int8
+    assert qp.scale.shape == (n, 1, 1)
+    back = np.asarray(quantize.dequantize_stack(qp.values, qp.scale))
+    scale = np.asarray(qp.scale)
+    bound = scale * (1.0 if stochastic else 0.5) * (1 + 1e-6)
+    assert (np.abs(back - x) <= bound).all()
+    np.testing.assert_array_equal(back[0], 0.0)
+
+
+def test_int8_requantize_is_idempotent():
+    """Re-quantizing an unchanged dequantized stack is a fixed point (the
+    engine re-quantizes every step; off-refresh steps must not random-walk
+    the stored sketch)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 16, 8)), jnp.float32)
+    qp = quantize.quantize_stack(x)
+    back = quantize.dequantize_stack(qp.values, qp.scale)
+    qp2 = quantize.quantize_stack(back)
+    np.testing.assert_array_equal(np.asarray(qp.values), np.asarray(qp2.values))
+
+
+# --------------------------------------------------------- memory accounting
+
+
+def test_int8_second_moment_bytes_ratio():
+    """Acceptance criterion: int8 pools report <= 0.27x the fp32
+    second_moment_bytes (values + scales), via the same metadata traversal
+    (works on eval_shape structs — no state materialization)."""
+    params = {"w1": jnp.zeros((512, 256), jnp.float32),
+              "w2": jnp.zeros((256, 256), jnp.float32)}
+    bytes_by = {}
+    for dt in ("fp32", "bf16", "int8"):
+        tx = sketchy(SketchyConfig(rank=64, block_size=256,
+                                   second_moment_dtype=dt))
+        bytes_by[dt] = api.second_moment_bytes(jax.eval_shape(tx.init, params))
+    assert bytes_by["bf16"] == bytes_by["fp32"] // 2
+    ratio = bytes_by["int8"] / bytes_by["fp32"]
+    assert ratio <= 0.27, f"int8 ratio {ratio:.3f} > 0.27"
+
+
+# --------------------------------------------------------- bf16 convergence
+
+
+def test_bf16_trains_paper_lm_within_tolerance_of_fp32():
+    """Acceptance criterion: bf16 second-moment storage reaches a loss
+    within tolerance of fp32 on a small synthetic paper_lm_100m-shaped run."""
+    from repro.configs.registry import get_reduced
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import model as model_lib
+    from repro.train.trainer import make_train_step
+
+    cfg = get_reduced("paper_lm_100m")
+    steps = 12
+    finals = {}
+    for dt in ("fp32", "bf16"):
+        tx = make_optimizer(OptimizerConfig(
+            name="sketchy", learning_rate=5e-3, rank=8, block_size=32,
+            update_every=2, total_steps=steps, schedule="constant",
+            second_moment_dtype=dt))
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        state = tx.init(params)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=8))
+        step = jax.jit(make_train_step(cfg, tx))
+        losses = []
+        for t in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        finals[dt] = losses
+    assert finals["bf16"][-1] < finals["bf16"][0]          # it actually trains
+    assert abs(finals["bf16"][-1] - finals["fp32"][-1]) < 0.05 * \
+        abs(finals["fp32"][0] - finals["fp32"][-1]) + 0.02
+
+
+def test_int8_trains_without_nans():
+    """int8 storage keeps the full engine (grafting, diag fallback, gating)
+    finite over several refresh windows."""
+    params = _params()
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, update_every=2,
+                               second_moment_dtype="int8"))
+    state = tx.init(params)
+    upd = jax.jit(tx.update)
+    for t in range(6):
+        u, state = upd(_grad(t), state, params)
+    for x in jax.tree.leaves(u):
+        assert np.isfinite(np.asarray(x)).all()
+    # count the stored int8 leaves: one per pooled matrix-factor stack
+    int8_leaves = [x for _, x in api.leaves_with_meta(state)
+                   if jnp.asarray(x).dtype == jnp.int8]
+    assert int8_leaves, "no int8-stored pool stacks found"
+
+
+# ------------------------------------------------- cross-dtype checkpointing
+
+
+@pytest.mark.parametrize("src,dst", [("fp32", "int8"), ("int8", "fp32"),
+                                     ("bf16", "fp32"), ("fp32", "bf16"),
+                                     ("bf16", "int8"), ("int8", "bf16")])
+def test_checkpoint_roundtrip_across_dtype_change(tmp_path, src, dst, ):
+    """A checkpoint written under one second_moment_dtype restores into a
+    run configured with another: int8 <-> fp32/bf16 re-quantize/dequantize
+    on the fly, fp32 <-> bf16 cast in place — and training continues."""
+    from repro.train import checkpoint as ckpt
+
+    params = _params()
+    mk = lambda dt: sketchy(SketchyConfig(rank=8, block_size=32,
+                                          update_every=2, beta2=0.99,
+                                          second_moment_dtype=dt))
+    tx_src = mk(src)
+    state = tx_src.init(params)
+    for t in range(3):
+        u, state = tx_src.update(_grad(t), state, params)
+    d = str(tmp_path)
+    ckpt.save(d, 7, {"opt": state})
+
+    tx_dst = mk(dst)
+    restored, step, _ = ckpt.restore(d, {"opt": tx_dst.init(params)})
+    assert step == 7
+    rstate = restored["opt"]
+
+    # the dequantized pools agree up to one quantization step of whichever
+    # side is int8 (exact when neither is)
+    for key in state.pools:
+        a = jax.tree.leaves(quantize.dequantize_pool(state.pools[key]))
+        b = jax.tree.leaves(quantize.dequantize_pool(rstate.pools[key]))
+        for x, y in zip(a, b):
+            x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+            tol = 0.0
+            if "int8" in (src, dst):
+                tol += np.abs(x).max() / 127.0
+            if "bf16" in (src, dst):
+                tol += np.abs(x).max() * 2 ** -7
+            np.testing.assert_allclose(x, y, atol=tol + 1e-7)
+
+    # training continues from the restored state in the dst layout
+    u, rstate = tx_dst.update(_grad(9), rstate, params)
+    for x in jax.tree.leaves(u):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+def test_checkpoint_same_dtype_roundtrip_exact_int8(tmp_path):
+    """Same-layout int8 checkpoints restore bit-exactly (no migration)."""
+    from repro.train import checkpoint as ckpt
+
+    params = _params()
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, update_every=2,
+                               second_moment_dtype="int8"))
+    state = tx.init(params)
+    for t in range(3):
+        u, state = tx.update(_grad(t), state, params)
+    d = str(tmp_path)
+    ckpt.save(d, 1, state)
+    restored, _, _ = ckpt.restore(d, tx.init(params))
+    got = api.leaves_with_meta(restored)
+    want = api.leaves_with_meta(state)
+    assert len(got) == len(want)
+    for (_, a), (_, b) in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- sharding co-location
+
+
+def test_scale_arrays_shard_alongside_int8_values():
+    """trainer.train_state_shardings gives a QuantizedPool's values and
+    scale the SAME leading-dim (opt_blocks) sharding decision — dequantize
+    is shard-local."""
+    from repro.sharding import rules as rules_lib
+    from repro.train.trainer import train_state_shardings
+
+    params = {"w": jnp.zeros((64, 32), jnp.float32),
+              "w2": jnp.zeros((64, 32), jnp.float32)}
+    tx = sketchy(SketchyConfig(rank=4, block_size=32,
+                               second_moment_dtype="int8"))
+    state = jax.eval_shape(tx.init, params)
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    rules = rules_lib.MeshRules(mesh=mesh,
+                                rules=dict(rules_lib.DEFAULT_LOGICAL_RULES))
+    sh = train_state_shardings(state, params, rules)
+
+    # walk the sharded tree for QuantizedPool nodes
+    found = []
+
+    def visit(x):
+        if isinstance(x, quantize.QuantizedPool):
+            found.append(x)
+        return x
+
+    jax.tree.map(visit, sh,
+                 is_leaf=lambda x: isinstance(x, quantize.QuantizedPool))
+    assert found, "no QuantizedPool in sharded state"
+    for qp in found:
+        v_sh = qp.values.value
+        s_sh = qp.scale.value
+        assert isinstance(v_sh, NamedSharding)
+        assert isinstance(s_sh, NamedSharding)
+        assert v_sh.spec[:1] == s_sh.spec[:1]  # same leading-dim decision
+
+
+# ---------------------------------------------------------------- validation
+
+
+def test_unknown_second_moment_dtype_rejected():
+    with pytest.raises(ValueError, match="second_moment_dtype"):
+        api.EngineConfig(second_moment_dtype="fp8")
+
+
+def test_pool_stats_dequantizes():
+    """api.pool_stats returns the f32 compute layout for any storage mode."""
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+              for i in range(3)}
+    tx = sketchy(SketchyConfig(rank=4, block_size=32, update_every=1,
+                               second_moment_dtype="int8"))
+    state = tx.init(params)
+    g = {k: jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+         for k in params}
+    u, state = tx.update(g, state, params)
+    stats = api.pool_stats(state)
+    for x in jax.tree.leaves(stats):
+        assert x.dtype == jnp.float32
+    index = pool.build_index(((32, 32),) * 3, 32)
+    assert jax.tree.leaves(stats)[0].shape[0] == index.total_blocks
