@@ -14,11 +14,21 @@ writes the same rows as a machine-readable JSON list for trajectory files):
   opt_step_time_kernels    pooled multi-leaf step per kernel_backend
                            ("xla" batched refs vs "pallas" grid-over-N
                            batched kernels; interpret mode on CPU)
+  bytes_on_wire_per_refresh  sketch-merge wire bytes per device per refresh
+                           (distributed/sketch_merge.py int8 wire, log-depth
+                           butterfly) vs the dense fp32 covariance
+                           all-reduce at the same depth
+  opt_step_time_sharded_stats  engine step under stats_reduction="sharded"
+                           on an 8-device host-platform mesh (subprocess:
+                           the bench process itself must keep ONE device)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -333,6 +343,104 @@ def bench_opt_step_time_kernels(n_leaves: int = 32, iters: int = 5) -> None:
              f"rank=8 block=32 update_every=1")
 
 
+def bench_bytes_on_wire_per_refresh(P: int = 4) -> None:
+    """Distributed-FD wire cost (ISSUE 6 acceptance row): bytes each device
+    ships per refresh through the log-depth butterfly
+    (``distributed/sketch_merge.pack_wire``: deflated column dropped, int8
+    values + one fp32 scale + fp32 rho per block, both sketch sides) vs the
+    dense alternative — recursive-doubling all-reduce of both d x d fp32
+    covariance factors at the same log2(P) depth.  Measured on real packed
+    structures, not a formula."""
+    from repro.core.fd import fd_init, fd_update_batched, FDState
+    from repro.distributed import sketch_merge
+
+    d, ell, N = 256, 64, 1
+    rng = np.random.default_rng(0)
+    st0 = fd_init(d, ell)
+    st = FDState(st0.eigvecs[None], st0.eigvals[None], st0.rho[None])
+    st = fd_update_batched(
+        st, jnp.asarray(rng.normal(size=(N, d, 8)), jnp.float32))
+    t0 = time.perf_counter()
+    wire = sketch_merge.pack_wire(st, "int8")
+    per_round = sketch_merge.wire_bytes(wire)
+    us = (time.perf_counter() - t0) * 1e6
+    rounds = (P - 1).bit_length()      # log2(P) butterfly rounds
+    sketch_bytes = rounds * 2 * per_round          # left + right sketches
+    dense_bytes = rounds * 2 * d * d * 4           # both fp32 covariances
+    _row("bytes_on_wire_per_refresh", us,
+         f"{sketch_bytes}B on wire (dense_fp32={dense_bytes}B, "
+         f"{dense_bytes / sketch_bytes:.1f}x less, P={P} d={d} ell={ell} "
+         f"int8 wire, {per_round}B/round/side)")
+
+
+def bench_opt_step_time_sharded_stats(iters: int = 10) -> None:
+    """Engine step wall-time with stats_reduction="sharded" on an 8-device
+    host-platform CPU mesh next to the replicated step on the same shapes.
+    Runs in a subprocess: this process must keep seeing one device (the
+    dry-run contract), and XLA only fakes the device count at startup."""
+    code = f"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sketchy as sk
+from repro.distributed import reduce as dreduce
+from repro.sharding.rules import shard_map
+
+rng = np.random.default_rng(0)
+params = {{f"w{{i}}": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+          for i in range(4)}}
+grads = {{k: jnp.asarray(rng.normal(size=(8,) + v.shape), jnp.float32)
+         for k, v in params.items()}}
+gmean = jax.tree.map(lambda g: g.mean(0), grads)
+mesh = jax.make_mesh((8,), ("data",))
+
+def bench(tx, fn, *args):
+    state = tx.init(params)
+    step = jax.jit(fn)
+    out = step(*args, state)            # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range({iters}):
+        out = step(*args, out[1])
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / {iters}
+
+cfg = dict(rank=16, block_size=64, update_every=2)
+tx_r = sk.sketchy(sk.SketchyConfig(**cfg))
+us_r = bench(tx_r, lambda g, s: tx_r.update(g, s, params), gmean)
+
+tx_s = sk.sketchy(sk.SketchyConfig(stats_reduction="sharded", **cfg))
+def sharded(g, s):
+    def body(gl, s):
+        gl = jax.tree.map(lambda x: x[0], gl)
+        gm = dreduce.pmean(gl, "data")
+        with dreduce.local_gradients(gl):
+            return tx_s.update(gm, s, params)
+    return shard_map(body, mesh=mesh, in_specs=(P("data"), P()),
+                     out_specs=(P(), P()), check_vma=False)(g, s)
+us_s = bench(tx_s, sharded, grads)
+print(f"SHARDED_US={{us_s:.1f}} REPL_US={{us_r:.1f}}")
+"""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(os.path.dirname(
+                   os.path.abspath(__file__))), "src")] +
+               ([os.environ["PYTHONPATH"]]
+                if os.environ.get("PYTHONPATH") else []))}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        _row("opt_step_time_sharded_stats", 0.0,
+             f"SUBPROCESS_FAILED: {r.stderr[-200:]!r}")
+        return
+    kv = dict(tok.split("=") for tok in r.stdout.split() if "=" in tok)
+    us_s, us_r = float(kv["SHARDED_US"]), float(kv["REPL_US"])
+    _row("opt_step_time_sharded_stats", us_s,
+         f"8-device butterfly merge, replicated_same_shapes={us_r:.1f}us "
+         f"4x(64x64) leaves rank=16 update_every=2")
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", metavar="PATH", default=None,
@@ -350,6 +458,8 @@ def main(argv=None) -> None:
     bench_opt_step_time()
     bench_opt_step_time_multileaf()
     bench_opt_step_time_kernels()
+    bench_bytes_on_wire_per_refresh()
+    bench_opt_step_time_sharded_stats()
 
     if args.json:
         with open(args.json, "w") as f:

@@ -19,20 +19,40 @@ knobs on top of Adam's O(d^2-per-layer) baseline:
 
   * ``rank`` — the FD sketch size ell: O((m+n) * ell) per block instead of
     Shampoo's O(m^2 + n^2).
-  * ``second_moment_dtype`` — how the pooled sketch stacks are *stored*
+  * ``second_moment_dtype`` — how the second-moment state is *stored*
     between steps (core/quantize.py): ``"fp32"`` (default, bitwise parity),
-    ``"bf16"`` (2x smaller), or ``"int8"`` (per-block quantized matrix
-    factors + fp32 scales, ~4x smaller).  Compute always dequantizes to f32.
+    ``"bf16"`` (2x smaller), or ``"int8"`` (quantized matrix factors with
+    per-block fp32 scales, plus whole-leaf-scaled int8 diag-fallback
+    accumulators for vector/scalar params, ~4x smaller).  Compute always
+    dequantizes to f32.
 
 Measured via ``api.second_moment_bytes`` on this demo's reduced config
-(rank 8, block 32; the diag-fallback accumulators for vector leaves stay
-fp32, so the ratio steepens at paper scale where matrix factors dominate):
+(rank 8, block 32; the per-block fp32 eigenvalue ladders and scales keep the
+small-model ratio under 4x — it steepens at paper scale where the matrix
+factors dominate):
 
     OptimizerConfig(name="sketchy", rank=8, ...)                     301.5kB
-    OptimizerConfig(..., second_moment_dtype="int8")                  84.4kB  (3.6x)
+    OptimizerConfig(..., second_moment_dtype="int8")                  84.2kB  (3.6x)
 
 ``main()`` below prints the exact before/after int8 numbers for the current
 config (no state materialization — ``jax.eval_shape`` over ``tx.init``).
+
+Distributed sketching
+---------------------
+Under data parallelism the default (``stats_reduction="replicated"``)
+all-reduces dense gradients and has every replica maintain an identical
+sketch.  ``OptimizerConfig(stats_reduction="sharded")`` (or
+``launch/train.py --stats-reduction sharded``) instead has each shard run
+the FD update on its *local* gradients and, at refresh time, merge the
+pooled sketch stacks across the ``data`` mesh axis with a log-depth
+butterfly of ``fd_merge`` rounds (src/repro/distributed/): each round ships
+``~(ell-1) * d`` int8 per block (sqrt(s)-weighted factors on the shared
+int8 wire, escaped mass ``rho`` summed alongside) instead of ``d^2`` fp32 —
+16x fewer bytes on the wire at d=256, ell=64 (``bytes_on_wire_per_refresh``
+benchmark row).  The update direction stays deterministic: with a 1-sized
+(or unbound) data axis the sharded path is bitwise-identical to replicated,
+and the merged sketch obeys the same FD error bound as a single-stream
+sketch of all shards' gradients (tests/test_distributed.py).
 """
 import collections
 

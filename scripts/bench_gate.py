@@ -7,9 +7,17 @@ Compares a fresh ``benchmarks/run.py --json`` output against the committed
   * ``fig1_memory_*`` — the paper's headline quantity.  Gated on the byte
     count parsed from the derived column; ANY increase is a regression
     (memory accounting is exact, not noisy).
+  * ``bytes_on_wire_per_refresh`` — the distributed-FD merge wire cost
+    (sketch_merge.pack_wire structures); byte-exact like the memory rows,
+    ANY increase is a regression.
   * ``opt_step_time_*`` — wall-time rows.  Gated on ``us_per_call`` with a
     multiplicative tolerance (default 1.75x) because shared CI runners are
     noisy; tighten locally with ``--time-tolerance``.
+
+``--only memory`` gates just the byte-exact rows (fig1_memory_*,
+bytes_on_wire_*) — CI runs these as a BLOCKING step; ``--only time`` gates
+just the wall-time rows (non-blocking on shared runners); the default
+``--only all`` gates both.
 
 Rows present in only one of the two files are reported but not fatal — the
 benchmark set grows PR over PR and the baseline is refreshed when it does.
@@ -17,7 +25,8 @@ benchmark set grows PR over PR and the baseline is refreshed when it does.
 Usage:
   python benchmarks/run.py --json /tmp/bench.json
   python scripts/bench_gate.py /tmp/bench.json \
-      [--baseline benchmarks/baseline.json] [--time-tolerance 1.75]
+      [--baseline benchmarks/baseline.json] [--time-tolerance 1.75] \
+      [--only memory|time|all]
 """
 from __future__ import annotations
 
@@ -46,10 +55,15 @@ def main(argv=None) -> int:
     p.add_argument("--time-tolerance", type=float, default=1.75,
                    help="max allowed us_per_call ratio vs baseline for "
                         "opt_step_time_* rows")
+    p.add_argument("--only", choices=("memory", "time", "all"), default="all",
+                   help="gate only the byte-exact rows (memory), only the "
+                        "wall-time rows (time), or both (all)")
     args = p.parse_args(argv)
 
     base = _rows(args.baseline)
     fresh = _rows(args.fresh)
+    gate_mem = args.only in ("memory", "all")
+    gate_time = args.only in ("time", "all")
 
     failures, notes = [], []
     for name in sorted(set(base) | set(fresh)):
@@ -60,15 +74,17 @@ def main(argv=None) -> int:
             notes.append(f"new row {name!r} (not in baseline)")
             continue
         b, f = base[name], fresh[name]
-        if name.startswith("fig1_memory_"):
+        is_bytes_row = name.startswith("fig1_memory_") or \
+            name.startswith("bytes_on_wire")
+        if is_bytes_row and gate_mem:
             bb, fb = _bytes_of(b), _bytes_of(f)
             if bb is None or fb is None:
                 failures.append(f"{name}: unparseable bytes "
                                 f"({b['derived']!r} vs {f['derived']!r})")
             elif fb > bb:
                 failures.append(
-                    f"{name}: second-moment bytes regressed {bb} -> {fb}")
-        elif name.startswith("opt_step_time"):
+                    f"{name}: gated bytes regressed {bb} -> {fb}")
+        elif name.startswith("opt_step_time") and gate_time:
             ratio = f["us_per_call"] / max(b["us_per_call"], 1e-9)
             if ratio > args.time_tolerance:
                 failures.append(

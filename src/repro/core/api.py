@@ -213,6 +213,7 @@ class Preconditioner(Protocol):
 
 
 REFRESH_SCHEDULES = ("synchronized", "staggered")
+STATS_REDUCTIONS = ("replicated", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +245,18 @@ class EngineConfig:
     # Compute always dequantizes to f32 at the batched-method boundary, so
     # kernels and Preconditioner implementations never see quantized arrays.
     second_moment_dtype: str = "fp32"
+    # Second-moment maintenance across data-parallel shards
+    # (src/repro/distributed/):
+    #   "replicated" — every shard sees the dp-mean gradients and maintains
+    #     identical statistics (the parity default).
+    #   "sharded"    — each shard FD-updates on its *local* gradients
+    #     (scaled 1/sqrt(P)) and refreshes end in a log-depth butterfly
+    #     sketch merge over ``stats_axis``.  Requires the Preconditioner to
+    #     implement ``refresh_sharded_batched`` (sketchy does); otherwise —
+    #     or when ``stats_axis`` is unbound or 1-sized at trace time — the
+    #     engine falls back to the replicated path bitwise.
+    stats_reduction: str = "replicated"
+    stats_axis: str = "data"
     state_dtype: Any = jnp.float32
     # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
     # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
@@ -263,6 +276,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown second_moment_dtype {self.second_moment_dtype!r}; "
                 f"expected one of {quantize.SECOND_MOMENT_DTYPES}")
+        if self.stats_reduction not in STATS_REDUCTIONS:
+            raise ValueError(
+                f"unknown stats_reduction {self.stats_reduction!r}; "
+                f"expected one of {STATS_REDUCTIONS}")
 
 
 class LeafState(NamedTuple):
@@ -369,6 +386,26 @@ def scale_by_preconditioner(precond: Preconditioner,
     update_stats_b = _batched_method(precond, "update_stats")
     refresh_b = _batched_method(precond, "refresh")
     precondition_b = _batched_method(precond, "precondition")
+    refresh_sharded_b = getattr(precond, "refresh_sharded_batched", None)
+
+    def sharded_ctx():
+        """(reduce module, axis size) when the sharded-stats path is live.
+
+        Live means: the knob is on, the implementation can merge
+        (``refresh_sharded_batched``), and ``cfg.stats_axis`` is bound with
+        size > 1 at trace time.  Anything else returns (None, 1) and the
+        engine takes the replicated path — bitwise-identical to the
+        default, which is also what makes ``"sharded"`` on a 1-sized data
+        axis exactly equal to ``"replicated"`` (a merge with one
+        participant is the identity).
+        """
+        if cfg.stats_reduction != "sharded" or refresh_sharded_b is None:
+            return None, 1
+        from repro.distributed import reduce as dreduce
+        size = dreduce.bound_axis_size(cfg.stats_axis)
+        if size is None or size <= 1:
+            return None, 1
+        return dreduce, size
 
     def index_of(shapes) -> pool.PoolIndex:
         return pool.build_index(
@@ -399,9 +436,12 @@ def scale_by_preconditioner(precond: Preconditioner,
         leaves = []
         for i, (p, plan) in enumerate(zip(flat, index.leaves)):
             if plan.group is None:
+                # diag-fallback accumulator; stored quantized like the
+                # pools (deterministic at init — zeros)
                 leaves.append(LeafState(
-                    stats=tag(jnp.zeros(p.shape, cfg.state_dtype),
-                              "second_moment", param_index=i),
+                    stats=quantize.quantize_leaf_state(
+                        tag(jnp.zeros(p.shape, cfg.state_dtype),
+                            "second_moment", param_index=i), qdtype),
                     graft=None))
             else:
                 graft = None
@@ -411,9 +451,10 @@ def scale_by_preconditioner(precond: Preconditioner,
                 leaves.append(LeafState(stats=None, graft=graft))
         return PrecondState(count=count, pools=pools, leaves=tuple(leaves))
 
-    def refresh_group(grp: pool.PoolGroup, raw, gb, count):
-        """Gated refresh over one packed stack (raw = untagged stats)."""
-        vrefresh = lambda s, G: refresh_b(s, G, count)
+    def refresh_group(grp: pool.PoolGroup, raw, gb, count, vrefresh):
+        """Gated refresh over one packed stack (raw = untagged stats);
+        ``vrefresh(stats, G_stack)`` is the ungated refresh — the plain
+        batched method, or its sharded-merge variant."""
         if cfg.update_every <= 1:
             return vrefresh(raw, gb)
         if cfg.refresh_schedule == "synchronized":
@@ -463,7 +504,31 @@ def scale_by_preconditioner(precond: Preconditioner,
 
         index = index_of([g.shape for g in flat])
         g32 = [g.astype(jnp.float32) for g in flat]
+
+        # Sharded statistics (src/repro/distributed/): the direction /
+        # grafting path keeps consuming dp-MEAN gradients, while the stats
+        # path sees this shard's LOCAL gradients scaled 1/sqrt(P) (so the
+        # butterfly-merged sketch estimates (1/P) sum_i G_i G_i^T — the
+        # covariance of the mean-gradient stream the replicated path
+        # sketches when shards agree).  The trainer hands the locals over
+        # via ``distributed.reduce.local_gradients``; called without that
+        # context, ``updates`` themselves are taken as local and the mean
+        # is recovered with a pmean.
+        dreduce, axis_size = sharded_ctx()
+        g32_local = g32
+        if dreduce is not None:
+            ctx = dreduce.current_local_gradients()
+            if ctx is None:
+                g32 = [dreduce.pmean(g, cfg.stats_axis) for g in g32_local]
+            else:
+                g32_local = [g.astype(jnp.float32)
+                             for g in jax.tree.leaves(ctx)]
         packed = pool.pack(index, g32)
+        packed_stats = packed
+        if dreduce is not None:
+            inv_sqrt_p = axis_size ** -0.5
+            packed_stats = pool.pack(index,
+                                     [g * inv_sqrt_p for g in g32_local])
 
         # One update/refresh/precondition dispatch per SHAPE GROUP — the
         # whole model's same-shaped blocks in one batched call each, straight
@@ -476,12 +541,18 @@ def scale_by_preconditioner(precond: Preconditioner,
             # stochastic requantization keyed by step: unbiased across the
             # repeated quantize-accumulate cycle of the EMA statistics
             qkey = jax.random.fold_in(jax.random.PRNGKey(0x0517), count)
+        if dreduce is None:
+            vrefresh = lambda s, G: refresh_b(s, G, count)
+        else:
+            vrefresh = lambda s, G: refresh_sharded_b(
+                s, G, count=count, axis=cfg.stats_axis, axis_size=axis_size)
         new_pools, pooled_dirs = {}, {}
         for gi, grp in enumerate(index.groups):
             gb = packed[grp.key]
+            gb_stats = packed_stats[grp.key]
             raw = quantize.dequantize_pool(state.pools[grp.key])
-            raw = update_stats_b(raw, gb, count)
-            raw = refresh_group(grp, raw, gb, count)
+            raw = update_stats_b(raw, gb_stats, count)
+            raw = refresh_group(grp, raw, gb_stats, count, vrefresh)
             pooled_dirs[grp.key] = precondition_b(raw, gb, count)
             gkey = None if qkey is None else jax.random.fold_in(qkey, gi)
             new_pools[grp.key] = quantize.requantize_pool(
@@ -493,12 +564,25 @@ def scale_by_preconditioner(precond: Preconditioner,
                                                 index.leaves)):
             gi = g32[i]
             if plan.group is None:   # diagonal (RMSProp) fallback
-                acc = cfg.beta2 * leaf.stats.value \
-                    + (1.0 - cfg.beta2) * jnp.square(gi)
+                # storage may be quantized (satellite of the pool-level
+                # scheme): dequantize/requantize are exact pass-throughs
+                # for fp32 (bitwise parity)
+                if dreduce is None:
+                    sq = jnp.square(gi)
+                else:
+                    # the diag residue travels in the sharded reduction
+                    # too: mean of per-shard squares over the data axis
+                    sq = dreduce.pmean(jnp.square(g32_local[i]),
+                                       cfg.stats_axis)
+                acc = cfg.beta2 * quantize.dequantize_pool(leaf.stats) \
+                    + (1.0 - cfg.beta2) * sq
                 direction = gi * jax.lax.rsqrt(acc + diag_eps)
                 out.append(direction.astype(g.dtype))
+                lkey = None if qkey is None \
+                    else jax.random.fold_in(qkey, len(index.groups) + i)
                 new_leaves.append(LeafState(
-                    stats=Tagged(acc, leaf.stats.meta), graft=None))
+                    stats=quantize.requantize_pool(leaf.stats, acc,
+                                                   key=lkey), graft=None))
                 continue
 
             direction = pool.unpack_leaf(index, pooled_dirs, i)

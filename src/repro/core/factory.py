@@ -54,6 +54,14 @@ class OptimizerConfig:
     # (per-block symmetric quantization of the matrix factors, ~4x).
     # Applies to sketchy and shampoo; adam's elementwise state is untouched.
     second_moment_dtype: str = "fp32"
+    # Second-moment maintenance across data-parallel shards
+    # (src/repro/distributed/): "replicated" keeps every replica's
+    # statistics identical from dp-mean gradients (parity default);
+    # "sharded" has each shard FD-update on its local gradients and merge
+    # sketches in a log-depth butterfly at refresh time.  Only sketchy
+    # implements the merge (``refresh_sharded_batched``) — shampoo/adam
+    # fall back to replicated statistics under this knob.
+    stats_reduction: str = "replicated"
 
 
 def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
@@ -64,7 +72,8 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             start_preconditioning_step=cfg.start_preconditioning_step,
             refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
             kernel_backend=cfg.kernel_backend,
-            second_moment_dtype=cfg.second_moment_dtype))
+            second_moment_dtype=cfg.second_moment_dtype,
+            stats_reduction=cfg.stats_reduction))
     if cfg.name == "shampoo":
         return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(
             block_size=cfg.block_size, beta2=beta2,

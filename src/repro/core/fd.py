@@ -151,6 +151,99 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
     )
 
 
+def fd_weighted_factor(state: FDState, *, drop_deflated: bool = False
+                       ) -> jnp.ndarray:
+    """Factor ``B = U diag(sqrt(s))`` with ``B B^T == U diag(s) U^T``.
+
+    Works on a single state (``U (d, ell)`` -> ``(d, ell)``) or a pooled
+    stack (``U (N, d, ell)`` -> ``(N, d, ell)``).  With ``drop_deflated``
+    the last column is omitted: the deflation invariant ``s[-1] == 0`` makes
+    it identically zero, so the merge wire format (distributed/
+    sketch_merge.py) sends ``ell - 1`` columns per side without loss.
+    """
+    U, s, _ = state
+    compute_dtype = jnp.promote_types(U.dtype, jnp.float32)
+    s_clamped = jnp.maximum(s.astype(compute_dtype), 0.0)
+    B = U.astype(compute_dtype) * jnp.sqrt(s_clamped)[..., None, :]
+    if drop_deflated and B.shape[-1] > 1:
+        B = B[..., :-1]
+    return B
+
+
+def fd_merge_factors_batched(Ba: jnp.ndarray, rho_a: jnp.ndarray,
+                             Bb: jnp.ndarray, rho_b: jnp.ndarray, *,
+                             ell: int, kernels=None) -> FDState:
+    """Merge two weighted-factor stacks into one rank-``ell`` sketch stack.
+
+    This is the mergeable-sketch primitive (Robust FD, Luo et al.): the
+    union covariance ``Ba Ba^T + Bb Bb^T`` is re-sketched by stacking the
+    factors, eigendecomposing the small Gram (same batched-gram kernel path
+    as ``fd_update_batched``), and deflating by the escaped eigenvalue
+    ``rho_t``; the carried masses add, so the merged ``rho*I`` compensation
+    stays an upper bound on the total escaped mass.
+
+    Args:
+      Ba, Bb: (N, d, ra) / (N, d, rb) factor stacks (``fd_weighted_factor``).
+      rho_a, rho_b: (N,) escaped masses carried by each side.
+      ell: target sketch rank of the merged state.
+      kernels: optional ``KernelSet`` for the batched Gram.
+    """
+    M = jnp.concatenate([Ba.astype(jnp.float32), Bb.astype(jnp.float32)],
+                        axis=-1)                       # (N, d, ra+rb)
+    if M.shape[-1] < ell:                              # skinny sides: pad so
+        pad = ell - M.shape[-1]                        # U keeps (N, d, ell)
+        M = jnp.pad(M, ((0, 0), (0, 0), (0, pad)))
+
+    if kernels is None:
+        C = jnp.matmul(jnp.swapaxes(M, -1, -2), M)
+    else:
+        C = kernels.batched_gram(M)
+    C = 0.5 * (C + jnp.swapaxes(C, -1, -2))
+
+    lam, V = jnp.linalg.eigh(C)             # ascending, batched
+    lam = jnp.maximum(lam[..., ::-1], 0.0)  # descending, clip tiny negatives
+    V = V[..., ::-1]
+
+    lam_top = lam[..., :ell]
+    rho_t = lam_top[..., ell - 1]           # (N,) escaped eigenvalue
+
+    inv_sqrt = jnp.where(lam_top > 1e-30,
+                         jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
+    U_new = jnp.matmul(M, V[..., :ell]) * inv_sqrt[:, None, :]
+    s_new = lam_top - rho_t[..., None]      # deflate: last entry exactly 0
+
+    return FDState(eigvecs=U_new, eigvals=s_new,
+                   rho=rho_a.astype(jnp.float32) + rho_b.astype(jnp.float32)
+                   + rho_t)
+
+
+def fd_merge_batched(a: FDState, b: FDState, kernels=None) -> FDState:
+    """Merge two pooled sketch stacks of the same shape (leading dim N).
+
+    ``cov(merged) ~= cov(a) + cov(b)`` within the FD bound: the operator-
+    norm error of the merged sketch against the exact sum is at most
+    ``merged.rho`` (escaped masses are additive through the merge)."""
+    _, _, ell = a.eigvecs.shape
+    out = fd_merge_factors_batched(
+        fd_weighted_factor(a), a.rho, fd_weighted_factor(b), b.rho,
+        ell=ell, kernels=kernels)
+    return FDState(eigvecs=out.eigvecs.astype(a.eigvecs.dtype),
+                   eigvals=out.eigvals.astype(a.eigvals.dtype),
+                   rho=out.rho.astype(a.rho.dtype))
+
+
+def fd_merge(a: FDState, b: FDState, kernels=None) -> FDState:
+    """Merge two single-block sketches (``U (d, ell)``); see
+    ``fd_merge_batched``.  Mergeability is what makes the sketch a
+    distributed-friendly statistic: shards sketch their local streams and
+    the combined sketch matches a single-stream sketch of the union within
+    the FD error bound (tests/test_fd.py)."""
+    stack = jax.tree.map(lambda x: x[None], a), jax.tree.map(
+        lambda x: x[None], b)
+    out = fd_merge_batched(stack[0], stack[1], kernels=kernels)
+    return FDState(*(x[0] for x in out))
+
+
 def fd_covariance(state: FDState, include_rho: bool = False) -> jnp.ndarray:
     """Materialize the sketched covariance (testing/analysis only)."""
     U, s, rho = state

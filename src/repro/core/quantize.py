@@ -38,6 +38,7 @@ state at rest and gradients in flight.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -103,6 +104,18 @@ def dequantize_stack(values: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return values.astype(jnp.float32) * scale
 
 
+def quantize_like(x: jnp.ndarray, scale_shape, *, key=None) -> QuantizedPool:
+    """Quantize with the absmax reduced over the axes ``scale_shape`` marks
+    as broadcast (size-1) — the general form behind both the pooled
+    per-block scales ``(N, 1, ..., 1)`` and the whole-leaf scalar scales
+    ``(1, ..., 1)`` of the diag-fallback accumulators."""
+    x32 = x.astype(jnp.float32)
+    axes = tuple(i for i, n in enumerate(scale_shape) if n == 1)
+    absmax = jnp.max(jnp.abs(x32), axis=axes, keepdims=True)
+    scale = int8_scale(absmax)
+    return QuantizedPool(values=round_int8(x32 / scale, key), scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Pool-level storage transform
 
@@ -111,6 +124,38 @@ def _int8_eligible(meta: api.StateMeta, value) -> bool:
     """int8 covers the per-block *matrix* factors (ndim >= 3 with the pool
     dim) — see module docstring for why vectors/scalars stay fp32."""
     return meta.role == "second_moment" and value.ndim >= 3
+
+
+def quantize_leaf_state(stats: Any, dtype: str, *, key=None) -> Any:
+    """Storage layout for a *per-leaf* (non-pooled) stats tree — the diag-
+    fallback accumulators of core/api.py.  Unlike ``quantize_pool`` there is
+    no leading blocks dim, so int8 uses one whole-array absmax scale of
+    shape ``(1,) * ndim`` per leaf; the scale is tagged
+    ``shard="replicate"`` (a scalar — the int8 values keep the owning
+    parameter's sharding via ``param_index``)."""
+    if dtype == "fp32":
+        return stats
+    if dtype == "bf16":
+        return api.map_with_meta(
+            lambda meta, v: v.astype(jnp.bfloat16)
+            if meta is not None and meta.role == "second_moment" else v,
+            stats)
+    if dtype != "int8":
+        raise ValueError(f"unknown second_moment_dtype {dtype!r}; expected "
+                         f"one of {SECOND_MOMENT_DTYPES}")
+
+    flat, treedef = jax.tree.flatten(stats, is_leaf=_is_node)
+    out = []
+    for i, x in enumerate(flat):
+        if isinstance(x, api.Tagged) and x.meta.role == "second_moment":
+            sub = None if key is None else jax.random.fold_in(key, i)
+            qp = quantize_like(x.value, (1,) * x.value.ndim, key=sub)
+            scale_meta = dataclasses.replace(x.meta, shard="replicate")
+            out.append(QuantizedPool(values=api.Tagged(qp.values, x.meta),
+                                     scale=api.Tagged(qp.scale, scale_meta)))
+        else:
+            out.append(x)
+    return jax.tree.unflatten(treedef, out)
 
 
 def quantize_pool(stats: Any, dtype: str, *, key=None) -> Any:
@@ -168,7 +213,11 @@ def requantize_pool(template: Any, raw: Any, *, key=None) -> Any:
     for i, (t, r) in enumerate(zip(flat_t, flat_r)):
         if isinstance(t, QuantizedPool):
             sub = None if key is None else jax.random.fold_in(key, i)
-            qp = quantize_stack(r, key=sub)
+            # absmax axes follow the template's scale shape: (N, 1, ..., 1)
+            # per-block scales for pools, (1, ..., 1) whole-array scales for
+            # diag-fallback leaves — for pools this is exactly what
+            # quantize_stack does (bitwise-identical path).
+            qp = quantize_like(r, t.scale.value.shape, key=sub)
             out.append(QuantizedPool(
                 values=api.Tagged(qp.values, t.values.meta),
                 scale=api.Tagged(qp.scale, t.scale.meta)))

@@ -56,6 +56,16 @@ class SketchyConfig:
     # storage dtype for the pooled FD sketches between steps
     # (core/quantize.py): "fp32" (bitwise parity) | "bf16" | "int8"
     second_moment_dtype: str = "fp32"
+    # second-moment maintenance across data-parallel shards
+    # (src/repro/distributed/): "replicated" (parity default) | "sharded"
+    # (local FD updates + log-depth butterfly sketch merge over stats_axis
+    # at refresh time)
+    stats_reduction: str = "replicated"
+    stats_axis: str = "data"
+    # exchange precision for the merge wire (sketch_merge.pack_wire):
+    # "int8" (default, ~(ell-1)*d int8 per block per round) | "fp32"
+    # (exact merge — the FD error bound holds with no quantization slack)
+    stats_wire_dtype: str = "int8"
 
 
 class SketchyBlockStats(NamedTuple):
@@ -124,6 +134,34 @@ class SketchyPreconditioner:
             right=fd_update_batched(state.right, jnp.swapaxes(G, -1, -2),
                                     self.cfg.beta2, kernels=self.kernels))
 
+    def refresh_sharded_batched(self, state, G, *, count, axis, axis_size):
+        """Sharded-statistics refresh (engine ``stats_reduction="sharded"``):
+        FD-update both sketch stacks on this shard's LOCAL gradient stack,
+        then butterfly-merge each across the data axis so every shard ends
+        the refresh holding the identical combined sketch.  Must run inside
+        ``shard_map`` with ``axis`` bound (the engine guarantees it).
+
+        The incoming sketch is replicated over the axis (the previous merge
+        left it so), and the butterfly *sums* covariances — so the carried
+        state is pre-scaled by 1/P to enter the merged total exactly once:
+        merged ~= beta2 * S_prev + (1/P) sum_i G_i G_i^T (the engine already
+        scaled the local gradient stack by 1/sqrt(P)), which coincides with
+        the replicated ``beta2 * S_prev + Gbar Gbar^T`` when shards agree.
+        """
+        from repro.distributed import reduce as dreduce
+        inv = 1.0 / axis_size
+        scale = lambda fd: FDState(eigvecs=fd.eigvecs,
+                                   eigvals=fd.eigvals * inv,
+                                   rho=fd.rho * inv)
+        state = SketchyBlockStats(left=scale(state.left),
+                                  right=scale(state.right))
+        local = self.refresh_batched(state, G, count=count)
+        merge = lambda st: dreduce.butterfly_merge_fd(
+            st, axis=axis, axis_size=axis_size, kernels=self.kernels,
+            wire_dtype=self.cfg.stats_wire_dtype)
+        return SketchyBlockStats(left=merge(local.left),
+                                 right=merge(local.right))
+
     def precondition_batched(self, state, G, *, count):
         tmp = fd_apply_inverse_root_batched(
             state.left, G, exponent=self.cfg.exponent,
@@ -147,6 +185,8 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
             refresh_schedule=cfg.refresh_schedule,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype,
+            stats_reduction=cfg.stats_reduction,
+            stats_axis=cfg.stats_axis,
             state_dtype=cfg.state_dtype))
 
 

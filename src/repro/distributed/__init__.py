@@ -1,0 +1,37 @@
+"""Distributed FD: sharded second-moment statistics via mergeable sketches.
+
+The paper's premise is that the gradient covariance lives in a small leading
+eigenspace — yet replicated data-parallel training still all-reduces full
+dense gradients and has every replica redundantly maintain identical
+sketches.  FD sketches are *mergeable* (concatenate weighted factors,
+re-shrink to rank ell) and Robust FD shows the escaped mass ``rho`` survives
+such combinations, so the second moment can instead be maintained as:
+
+  1. each data-parallel shard FD-updates its pooled sketch stacks on its
+     *local* microbatch gradients (``core/fd.fd_update_batched``), and
+  2. at refresh time a log-depth butterfly merge over the ``data`` mesh axis
+     (``reduce.butterfly_merge_fd``: ``jax.lax.ppermute`` rounds inside the
+     ``sharding/rules.shard_map`` wrapper) combines the ``(N, d, ell)``
+     stacks via ``core/fd.fd_merge_batched``.
+
+Exchanged factors ride the shared int8 rounding core (``core/quantize.py`` /
+``train/compression.py``): the wire format is ``~ell * d`` int8 per block
+(``sketch_merge.pack_wire``) instead of ``d^2`` fp32 gradients.
+
+Enabled by ``stats_reduction="sharded"`` (``core/api.EngineConfig``,
+threaded through ``SketchyConfig`` / ``OptimizerConfig`` /
+``launch/train.py``); with no bound data axis — or a 1-sized one — the
+engine takes the replicated path, bitwise-identical to the default.
+"""
+from repro.distributed.reduce import (bound_axis_size, butterfly_merge_fd,
+                                      current_local_gradients,
+                                      local_gradients, pmean)
+from repro.distributed.sketch_merge import (WireSketch, merge_stack_states,
+                                            merge_wire, pack_wire,
+                                            unpack_wire, wire_bytes)
+
+__all__ = [
+    "bound_axis_size", "butterfly_merge_fd", "current_local_gradients",
+    "local_gradients", "pmean", "WireSketch", "merge_stack_states",
+    "merge_wire", "pack_wire", "unpack_wire", "wire_bytes",
+]

@@ -37,6 +37,14 @@ def main() -> None:
                         "between steps (core/quantize.py): fp32 = bitwise "
                         "parity, bf16 = 2x smaller, int8 = per-block "
                         "quantized matrix factors (~4x); compute stays f32")
+    p.add_argument("--stats-reduction", default="replicated",
+                   choices=["replicated", "sharded"],
+                   help="second-moment maintenance across data-parallel "
+                        "shards (src/repro/distributed/): replicated = every "
+                        "device maintains identical stats from mean grads; "
+                        "sharded = local FD updates + log-depth butterfly "
+                        "sketch merge over the data axis at refresh time "
+                        "(sketchy only; needs > 1 device)")
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--checkpoint-every", type=int, default=50)
     p.add_argument("--resume", action="store_true")
@@ -64,7 +72,8 @@ def main() -> None:
         rank=args.rank, block_size=args.block_size,
         update_every=args.update_every, weight_decay=1e-4,
         kernel_backend=args.kernel_backend,
-        second_moment_dtype=args.second_moment_dtype)
+        second_moment_dtype=args.second_moment_dtype,
+        stats_reduction=args.stats_reduction)
     tx = make_optimizer(opt_cfg)
 
     data = SyntheticLM(DataConfig(
@@ -86,7 +95,16 @@ def main() -> None:
                 args.checkpoint_dir, (params, opt_state))
             print(f"resumed from step {start_step}")
 
-    step_fn = jax.jit(make_train_step(cfg, tx))
+    dp_mesh = None
+    if args.stats_reduction == "sharded":
+        ndev = len(jax.devices())
+        if ndev > 1 and args.batch % ndev == 0:
+            dp_mesh = jax.make_mesh((ndev,), ("data",))
+            print(f"sharded stats over data axis ({ndev} devices)")
+        else:
+            print(f"sharded stats requested but devices={ndev} "
+                  f"batch={args.batch}; falling back to replicated")
+    step_fn = jax.jit(make_train_step(cfg, tx, data_parallel_mesh=dp_mesh))
     monitor = StragglerMonitor()
     metrics_log = []
 

@@ -105,6 +105,15 @@ def constrain(x, *logical_axes):
     return jax.lax.with_sharding_constraint(x, sh)
 
 
+def dp_axis_names(mesh: Mesh) -> tuple:
+    """Mesh axes the ``batch`` logical axis maps onto — the data-parallel
+    axes a gradient mean / sketch merge reduces over (train/trainer.py,
+    distributed/reduce.py)."""
+    mapped = DEFAULT_LOGICAL_RULES["batch"]
+    axes = mapped if isinstance(mapped, tuple) else (mapped,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
 def axis_extent(logical: str) -> int:
     """Product of mesh-axis sizes a logical axis maps to (1 = unmapped)."""
     r = current()

@@ -299,6 +299,11 @@ def _migrate_quantized(path: str, manifest: dict, named: list,
 
     dequant_cache: dict = {}    # base -> dequantized fp32 np array
     quant_cache: dict = {}      # base -> (values int8, scale fp32) np arrays
+    # template scale shapes drive the absmax reduction: per-block scales
+    # (N, 1, ..., 1) for pool stacks, whole-array (1, ..., 1) scales for
+    # the diag-fallback leaf accumulators (quantize.quantize_leaf_state)
+    scale_shapes = {n[:-len(_QP_SCALE)]: tuple(np.shape(t))
+                    for n, t in named if n.endswith(_QP_SCALE)}
 
     def quantized(base, name, meta):
         if base not in quant_cache:
@@ -306,7 +311,9 @@ def _migrate_quantized(path: str, manifest: dict, named: list,
             check_role(name, meta, rec)
             src = np.asarray(jax.numpy.asarray(_load_rec(path, rec))
                              .astype(jax.numpy.float32))
-            qp = quantize.quantize_stack(jax.numpy.asarray(src))
+            sshape = scale_shapes.get(
+                base, (np.shape(src)[:1] or (1,)) + (1,) * (src.ndim - 1))
+            qp = quantize.quantize_like(jax.numpy.asarray(src), sshape)
             quant_cache[base] = (np.asarray(qp.values), np.asarray(qp.scale))
             consumed.add(rec["name"])
         return quant_cache[base]

@@ -27,7 +27,13 @@ from repro.sharding.rules import shard_map
 PyTree = Any
 
 
-def _quantized_psum(g: jnp.ndarray, axes: Sequence[str], key) -> jnp.ndarray:
+def quantized_psum(g: jnp.ndarray, axes: Sequence[str], key) -> jnp.ndarray:
+    """int8 quantize -> int32 psum -> rescaled mean over bound mesh axes.
+
+    Public: the shared int8 transport primitive — the gradient all-reduce
+    here and the sketch-merge wire (distributed/sketch_merge.py) both ride
+    the same ``core/quantize.py`` scale/round core.
+    """
     g32 = g.astype(jnp.float32)
     absmax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axes[0])
     for a in axes[1:]:
@@ -68,7 +74,7 @@ def compressed_mean_grads(grads: PyTree, mesh: Mesh,
         key = jax.random.PRNGKey(seed)
         out = []
         for i, g in enumerate(leaves):
-            out.append(_quantized_psum(g, axes, jax.random.fold_in(key, i)))
+            out.append(quantized_psum(g, axes, jax.random.fold_in(key, i)))
         return tuple(out)
 
     return jax.tree.unflatten(treedef, list(reduce_all(*flat)))

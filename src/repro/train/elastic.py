@@ -67,6 +67,64 @@ def remesh(plan: ElasticPlan, devices: Optional[Sequence] = None):
     return jax.sharding.Mesh(grid, plan.axis_names)
 
 
+def remesh_opt_state(opt_state, params, mesh, rules: Optional[dict] = None):
+    """Re-balance live training state onto a new mesh.
+
+    Restore used to route every leaf through its owning parameter's
+    sharding, which left the packed pool stacks (core/pool.py) replicated
+    after a mesh change.  This routes them through the metadata-driven
+    sharding assignment instead (``trainer.train_state_shardings``), so the
+    pooled leading ``opt_blocks`` dim is re-sharded directly over the new
+    mesh — one ``device_put`` re-balances every same-shaped block in the
+    model across the surviving devices.
+
+    Returns ``(params, opt_state)`` placed on ``mesh``.
+    """
+    from repro.sharding import rules as rules_lib
+    from repro.train import trainer
+    mr = rules_lib.MeshRules(mesh=mesh,
+                             rules={**rules_lib.DEFAULT_LOGICAL_RULES,
+                                    **(rules or {})})
+    param_sh = rules_lib.tree_param_shardings(params, mr)
+    state_sh = trainer.train_state_shardings(opt_state, params, mr)
+    return (jax.device_put(params, param_sh),
+            jax.device_put(opt_state, state_sh))
+
+
+def merge_sketches_on_shrink(states: Sequence):
+    """Fold per-shard sketch statistics into one on mesh shrink.
+
+    Under ``stats_reduction="sharded"`` the shards' sketches only coincide
+    at refresh boundaries; when devices leave mid-window, each departing
+    shard's last pooled ``FDState`` stacks are tree-merged into the
+    survivors' (exact ``fd_merge_batched``, no wire) so no observed
+    curvature is dropped.  ``states`` is a sequence of structurally equal
+    stats pytrees (e.g. ``PrecondState.pools`` values or
+    ``SketchyBlockStats``); FD stacks merge via the mergeable-sketch
+    primitive, everything else must already agree and passes through from
+    the first shard.
+    """
+    from repro.core import api
+    from repro.core.fd import FDState
+    from repro.distributed import sketch_merge
+    states = list(states)
+    if len(states) == 1:
+        return states[0]
+
+    is_fd = lambda x: isinstance(x, FDState)
+    flat0, treedef = jax.tree.flatten(states[0], is_leaf=is_fd)
+    flats = [treedef.flatten_up_to(s) for s in states]
+    out = []
+    for i, x in enumerate(flat0):
+        if is_fd(x):
+            merged = sketch_merge.merge_stack_states(
+                [FDState(*api.untag(list(f[i]))) for f in flats])
+            out.append(api.tag_like(x, merged))
+        else:
+            out.append(x)
+    return jax.tree.unflatten(treedef, out)
+
+
 class StragglerMonitor:
     """Robust per-step latency anomaly detector (median + MAD)."""
 

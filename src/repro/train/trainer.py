@@ -34,11 +34,26 @@ PyTree = Any
 
 def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
                     unroll: bool = False,
-                    microbatches: Optional[int] = None) -> Callable:
+                    microbatches: Optional[int] = None,
+                    data_parallel_mesh=None,
+                    dp_axes: Optional[tuple] = None) -> Callable:
+    """Build the jit-able train step.
+
+    With ``data_parallel_mesh`` the whole step runs inside the
+    ``sharding/rules.shard_map`` wrapper with the batch split over
+    ``dp_axes``: each shard computes gradients on its local slice, the
+    chain consumes the dp-mean gradients (int-free psum — clipping,
+    grafting and momentum see exactly what a replicated run sees), and the
+    per-shard local gradients are handed to the engine's sharded-statistics
+    path via ``distributed.reduce.local_gradients`` so
+    ``stats_reduction="sharded"`` optimizers sketch their local stream and
+    butterfly-merge at refresh time.  Without a mesh the behavior is the
+    seed's, untouched.
+    """
     def loss_of(params, batch):
         return model_lib.loss_fn(cfg, params, batch, unroll=unroll)
 
-    def train_step(params, opt_state, batch):
+    def loss_and_grads(params, batch):
         if microbatches and microbatches > 1:
             def split(key, x):
                 axis = 1 if key == "positions" else 0  # positions: (3, B, S)
@@ -73,14 +88,52 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
             grads = jax.tree.map(lambda g: g * inv, gsum)
         else:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        return loss, grads
 
+    def train_step(params, opt_state, batch):
+        loss, grads = loss_and_grads(params, batch)
         updates, new_opt_state = tx.update(grads, opt_state, params)
         new_params = apply_updates(params, updates)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(grads)))
         return new_params, new_opt_state, {"loss": loss, "grad_norm": gnorm}
 
-    return train_step
+    if data_parallel_mesh is None:
+        return train_step
+
+    from repro.distributed import reduce as dreduce
+    mesh = data_parallel_mesh
+    axes = rules_lib.dp_axis_names(mesh) if dp_axes is None else \
+        tuple(a for a in dp_axes if a in mesh.axis_names)
+    if not axes:
+        return train_step
+
+    def shard_body(params, opt_state, batch):
+        loss_local, grads_local = loss_and_grads(params, batch)
+        loss, grads = loss_local, grads_local
+        for a in axes:
+            loss = dreduce.pmean(loss, a)
+            grads = dreduce.pmean(grads, a)
+        with dreduce.local_gradients(grads_local):
+            updates, new_opt_state = tx.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    def sharded_train_step(params, opt_state, batch):
+        def batch_spec(key):
+            # positions batches on axis 1 ((3, B, S)); everything else on 0
+            if key == "positions":
+                return P(None, axes)
+            return P(axes)
+        step = rules_lib.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(P(), P(), {k: batch_spec(k) for k in batch}),
+            out_specs=(P(), P(), P()), check_vma=False)
+        return step(params, opt_state, batch)
+
+    return sharded_train_step
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,8 @@ except ImportError:  # fall back to the deterministic sampling shim
     from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.fd import (FDState, fd_apply_inverse_root, fd_covariance,
-                           fd_init, fd_update)
+                           fd_init, fd_merge, fd_merge_batched, fd_update,
+                           fd_weighted_factor)
 
 jax.config.update("jax_enable_x64", False)
 
@@ -105,6 +106,124 @@ def test_full_rank_exact():
     assert float(st_.rho) < 1e-4
     np.testing.assert_allclose(np.asarray(fd_covariance(st_)), G,
                                atol=1e-3 * np.linalg.norm(G, 2))
+
+
+# ---------------------------------------------------------------- fd_merge
+# (distributed sketching: src/repro/distributed/ merges per-shard sketches)
+
+
+def _sketch(stream, d, ell):
+    st_ = fd_init(d, ell)
+    for g in stream:
+        st_ = fd_update(st_, jnp.asarray(g, jnp.float32))
+    return st_
+
+
+def test_merge_commutative_up_to_sign():
+    """a (+) b and b (+) a agree as operators (eigvecs may flip sign)."""
+    d, ell = 24, 6
+    a = _sketch(_stream(0, d, 30), d, ell)
+    b = _sketch(_stream(1, d, 30), d, ell)
+    ab, ba = fd_merge(a, b), fd_merge(b, a)
+    np.testing.assert_allclose(np.asarray(ab.eigvals), np.asarray(ba.eigvals),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(ab.rho), float(ba.rho), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fd_covariance(ab)),
+                               np.asarray(fd_covariance(ba)),
+                               atol=1e-3 * max(float(ab.eigvals[0]), 1.0))
+
+
+def test_merge_associative_on_low_rank():
+    """With total rank <= ell the merge is exact, so grouping is immaterial:
+    (a+b)+c == a+(b+c) and rho stays 0 (no escaped mass to order)."""
+    d, r, ell = 20, 2, 8
+    rng = np.random.default_rng(3)
+    sketches, G = [], np.zeros((d, d))
+    for k in range(3):
+        W = np.linalg.qr(rng.normal(size=(d, r)))[0]
+        stream = [W @ rng.normal(size=r) for _ in range(15)]
+        G += sum(np.outer(g, g) for g in stream)
+        sketches.append(_sketch(stream, d, ell))
+    a, b, c = sketches
+    left = fd_merge(fd_merge(a, b), c)
+    right = fd_merge(a, fd_merge(b, c))
+    scale = np.linalg.norm(G, 2)
+    np.testing.assert_allclose(np.asarray(fd_covariance(left)),
+                               np.asarray(fd_covariance(right)),
+                               atol=1e-3 * scale)
+    np.testing.assert_allclose(np.asarray(fd_covariance(left)), G,
+                               atol=1e-3 * scale)
+    assert float(left.rho) < 1e-4 * scale
+    assert float(right.rho) < 1e-4 * scale
+
+
+def test_merge_rho_conservation():
+    """rho_merged = rho_a + rho_b + rho_t >= rho_a + rho_b: carried masses
+    are additive through the merge (Robust FD), never dropped."""
+    d, ell = 24, 4
+    a = _sketch(_stream(4, d, 60, decay=8.0), d, ell)
+    b = _sketch(_stream(5, d, 60, decay=8.0), d, ell)
+    m = fd_merge(a, b)
+    assert float(m.rho) >= float(a.rho) + float(b.rho) - 1e-5
+    # identity participant: merging with an empty sketch changes nothing
+    e = fd_init(d, ell)
+    m_id = fd_merge(a, e)
+    np.testing.assert_allclose(np.asarray(fd_covariance(m_id)),
+                               np.asarray(fd_covariance(a)), atol=1e-4)
+    np.testing.assert_allclose(float(m_id.rho), float(a.rho), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), shards=st.integers(2, 5))
+def test_merge_disjoint_shards_matches_stream_bound(seed, shards):
+    """Sketching k disjoint shards locally and merging matches the exact
+    union covariance within the FD guarantee (||G - cov|| <= rho), i.e. the
+    merged sketch is as good as a single-stream sketch up to its own
+    (additively carried) escaped mass."""
+    d, ell, T = 24, 6, 20
+    G = np.zeros((d, d))
+    sketches = []
+    for k in range(shards):
+        stream = _stream(seed + k, d, T)
+        G += sum(np.outer(g, g) for g in stream)
+        sketches.append(_sketch(stream, d, ell))
+    merged = sketches[0]
+    for s in sketches[1:]:
+        merged = fd_merge(merged, s)
+    err = np.linalg.norm(G - np.asarray(fd_covariance(merged)), 2)
+    assert err <= float(merged.rho) * (1 + 1e-4) + 1e-3
+    # and the single-stream sketch of the concatenated stream is within the
+    # two sketches' combined escaped mass of the merged one
+    single = _sketch([g for k in range(shards)
+                      for g in _stream(seed + k, d, T)], d, ell)
+    cross = np.linalg.norm(np.asarray(fd_covariance(single)) -
+                           np.asarray(fd_covariance(merged)), 2)
+    assert cross <= (float(single.rho) + float(merged.rho)) * (1 + 1e-4) + 1e-3
+
+
+def test_merge_batched_mirrors_single():
+    """fd_merge_batched over a stack == fd_merge per block; the wire factor
+    drops only the deflated zero column."""
+    d, ell, N = 16, 5, 3
+    rng = np.random.default_rng(7)
+    mk = lambda s: _sketch([rng.normal(size=d) for _ in range(25)], d, ell)
+    As, Bs = [mk(0) for _ in range(N)], [mk(1) for _ in range(N)]
+    stack = lambda sts: FDState(
+        eigvecs=jnp.stack([s.eigvecs for s in sts]),
+        eigvals=jnp.stack([s.eigvals for s in sts]),
+        rho=jnp.stack([s.rho for s in sts]))
+    merged = fd_merge_batched(stack(As), stack(Bs))
+    for n in range(N):
+        one = fd_merge(As[n], Bs[n])
+        np.testing.assert_allclose(
+            np.asarray(fd_covariance(FDState(merged.eigvecs[n],
+                                             merged.eigvals[n],
+                                             merged.rho[n]))),
+            np.asarray(fd_covariance(one)), atol=1e-3)
+    B = fd_weighted_factor(stack(As), drop_deflated=True)
+    assert B.shape == (N, d, ell - 1)
+    full = fd_weighted_factor(stack(As))
+    np.testing.assert_allclose(np.asarray(full[..., -1]), 0.0, atol=1e-5)
 
 
 @pytest.mark.parametrize("exponent", [-0.25, -0.5, -1.0])

@@ -192,6 +192,39 @@ def test_int8_trains_without_nans():
     assert int8_leaves, "no int8-stored pool stacks found"
 
 
+def test_int8_diag_fallback_leaves_quantized():
+    """Diag-fallback accumulators (vector/scalar leaves) also store int8
+    under second_moment_dtype="int8": whole-leaf (1,)*ndim absmax scale,
+    replicated-scale tag, and the dequantized accumulator tracks the fp32
+    engine's within the quantization step."""
+    params = _params()
+    states, taus = {}, {}
+    for dt in ("fp32", "int8"):
+        tx = sketchy(SketchyConfig(rank=8, block_size=32, beta2=0.99,
+                                   update_every=2, second_moment_dtype=dt))
+        state = tx.init(params)
+        upd = jax.jit(tx.update)
+        for t in range(5):
+            _, state = upd(_grad(t), state, params)
+        states[dt] = state
+        # the vector param "v" lands in a diag-fallback leaf
+        (leaf,) = [l for l in state.leaves if l.stats is not None]
+        taus[dt] = np.asarray(quantize.dequantize_pool(leaf.stats))
+
+    (leaf8,) = [l for l in states["int8"].leaves if l.stats is not None]
+    qp = leaf8.stats
+    assert isinstance(qp, quantize.QuantizedPool)
+    assert api.untag(qp.values).dtype == jnp.int8
+    assert api.untag(qp.scale).shape == (1,)          # one whole-leaf scale
+    assert qp.scale.meta.shard == "replicate"
+    assert qp.values.meta.param_index is not None     # rides the param layout
+    # fp32 run keeps plain Tagged stats on the same leaf
+    (leaf32,) = [l for l in states["fp32"].leaves if l.stats is not None]
+    assert isinstance(leaf32.stats, api.Tagged)
+    step = float(api.untag(qp.scale).max())
+    assert np.abs(taus["int8"] - taus["fp32"]).max() <= 5 * step + 1e-7
+
+
 # ------------------------------------------------- cross-dtype checkpointing
 
 
