@@ -14,6 +14,13 @@ writes the same rows as a machine-readable JSON list for trajectory files):
   opt_step_time_kernels    pooled multi-leaf step per kernel_backend
                            ("xla" batched refs vs "pallas" grid-over-N
                            batched kernels; interpret mode on CPU)
+  opt_step_time_{inline,async}_refresh  refresh-step direction critical
+                           path per refresh_mode: async's one-step-stale
+                           pipeline compiles ZERO eigh sites on the
+                           direction path (overlap win), donated buffers
+  lm_step_time_refresh_schedule  end-to-end reduced-LM step time,
+                           synchronized vs staggered refresh phasing
+                           (mean + spike max)
   bytes_on_wire_per_refresh  sketch-merge wire bytes per device per refresh
                            (distributed/sketch_merge.py int8 wire, log-depth
                            butterfly) vs the dense fp32 covariance
@@ -77,6 +84,12 @@ def bench_fig1_memory() -> None:
             rank=256, block_size=1024, second_moment_dtype="bf16"))),
         ("sketchy_l256_int8", sketchy(SketchyConfig(
             rank=256, block_size=1024, second_moment_dtype="int8"))),
+        # async refresh pipeline (core/api.py pending slot): transient
+        # double buffer, must cost ZERO accounted second-moment bytes —
+        # this row is byte-equal to sketchy_l256 and the memory gate blocks
+        # on it (scripts/bench_gate.py)
+        ("sketchy_l256_async", sketchy(SketchyConfig(
+            rank=256, block_size=1024, refresh_mode="async"))),
     ]
     rows = [(name, api.second_moment_bytes(jax.eval_shape(tx.init, params)))
             for name, tx in txs]
@@ -153,7 +166,8 @@ def bench_fig3_spectral_decay(steps: int = 30) -> None:
     state = tx.init(params)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))
-    step = jax.jit(make_train_step(cfg, tx))
+    # donate=False: grad_fn reads params before each step in the same loop
+    step = jax.jit(make_train_step(cfg, tx, donate=False))
     beta2 = 0.999
     L = None
     t0 = time.perf_counter()
@@ -214,7 +228,7 @@ def bench_fig2_lm_quality(steps: int = 60) -> None:
             update_every=2, total_steps=steps, schedule="constant"))
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
         state = tx.init(params)
-        step = jax.jit(make_train_step(cfg, tx))
+        step = make_train_step(cfg, tx)   # jitted + donated internally
         t0 = time.perf_counter()
         losses = []
         for t in range(steps):
@@ -343,6 +357,119 @@ def bench_opt_step_time_kernels(n_leaves: int = 32, iters: int = 5) -> None:
              f"rank=8 block=32 update_every=1")
 
 
+def bench_opt_step_time_async_refresh(n_leaves: int = 64,
+                                      iters: int = 10) -> None:
+    """Refresh-step critical path, inline vs async (ISSUE 7 tentpole row).
+
+    What overlapped execution hides is the time from gradient arrival to
+    the update DIRECTION being ready — the refresh itself continues in the
+    shadow of the next forward/backward.  On the single-stream CPU backend
+    that latency is measured by the direction-only program
+    ``jit(lambda g, s: tx.update(g, s)[0])``: XLA dead-code-eliminates the
+    state outputs, and under async the refresh (eigh + shrink) is dead code
+    for the direction — the compiled program has ZERO eigh call sites —
+    while inline's direction data-depends on the refresh it just computed.
+    Both engines are pinned to a refresh-boundary count (the worst-case
+    step; off-boundary steps are identical by construction).  The derived
+    column carries the eigh site counts and the full donated steady-state
+    step time (refresh amortized over ``update_every``) for both modes.
+    """
+    from repro.core.sketchy import SketchyConfig, sketchy
+
+    rng = np.random.default_rng(0)
+    mk = lambda: jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    params = {f"w{i:03d}": mk() for i in range(n_leaves)}
+    g = {k: mk() for k in params}
+    update_every = 10
+    out = {}
+    for mode in ("inline", "async"):
+        tx = sketchy(SketchyConfig(rank=16, block_size=64,
+                                   update_every=update_every,
+                                   refresh_mode=mode))
+        # full steady-state step (donated opt_state, refresh amortized)
+        full = jax.jit(lambda gg, s: tx.update(gg, s), donate_argnums=(1,))
+        st = tx.init(params)
+        u, st = full(g, st)     # compile + leave count=1
+        jax.block_until_ready(u)
+        t0 = time.perf_counter()
+        for _ in range(iters * update_every):
+            u, st = full(g, st)
+        jax.block_until_ready(u)
+        full_us = (time.perf_counter() - t0) * 1e6 / (iters * update_every)
+
+        # direction-only program at a refresh-boundary count: advance a
+        # fresh state to count == update_every, then measure with the state
+        # held fixed (every call sees the refresh-due branch)
+        st = tx.init(params)
+        for _ in range(update_every):
+            _, st = jax.jit(lambda gg, s: tx.update(gg, s))(g, st)
+        dir_fn = jax.jit(lambda gg, s: tx.update(gg, s)[0])
+        # count eigh in the LOWERED program: lowering dead-code-eliminates
+        # the discarded state outputs (the traced jaxpr itself keeps them)
+        eigh_sites = dir_fn.lower(g, st).as_text().count("eigh")
+        u = dir_fn(g, st)       # compile
+        jax.block_until_ready(u)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            u = dir_fn(g, st)
+        jax.block_until_ready(u)
+        us = (time.perf_counter() - t0) * 1e6 / iters
+        out[mode] = (us, full_us, eigh_sites)
+
+    i_us, i_full, i_eigh = out["inline"]
+    a_us, a_full, a_eigh = out["async"]
+    assert a_eigh == 0, f"async direction path still compiles eigh ({a_eigh})"
+    _row("opt_step_time_inline_refresh", i_us,
+         f"direction critical path at refresh boundary, eigh_sites={i_eigh} "
+         f"full_step={i_full:.1f}us leaves={n_leaves} rank=16 "
+         f"update_every={update_every}")
+    _row("opt_step_time_async_refresh", a_us,
+         f"direction critical path at refresh boundary, eigh_sites={a_eigh} "
+         f"full_step={a_full:.1f}us overlap_win={i_us / a_us:.1f}x "
+         f"vs inline (donated double buffer)")
+
+
+def bench_lm_step_time_refresh_schedule(steps: int = 24) -> None:
+    """End-to-end step time on the reduced paper_lm_100m, synchronized vs
+    staggered refresh phasing (ISSUE 7 satellite): same amortized eigh
+    budget, but staggered flattens the every-``update_every``-steps spike
+    into ~N/k blocks per step.  Derived reports mean and max step wall time
+    per schedule — the max is the spike the staggered schedule removes."""
+    from repro.configs.registry import get_reduced
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import model as model_lib
+    from repro.train.trainer import make_train_step
+
+    cfg = get_reduced("paper_lm_100m")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=8))
+    out = {}
+    for sched in ("synchronized", "staggered"):
+        tx = make_optimizer(OptimizerConfig(
+            name="sketchy", learning_rate=5e-3, rank=8, block_size=32,
+            update_every=4, total_steps=steps, schedule="constant",
+            refresh_schedule=sched))
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        state = tx.init(params)
+        step = make_train_step(cfg, tx)   # jitted + donated internally
+        times = []
+        for t in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+            t0 = time.perf_counter()
+            params, state, m = step(params, state, batch)
+            jax.block_until_ready(m["loss"])
+            times.append(time.perf_counter() - t0)
+        times = np.array(times[4:]) * 1e6   # drop compile/warmup steps
+        out[sched] = (times.mean(), times.max())
+    s_mean, s_max = out["synchronized"]
+    g_mean, g_max = out["staggered"]
+    _row("lm_step_time_refresh_schedule", g_mean,
+         f"staggered mean={g_mean:.0f}us max={g_max:.0f}us vs synchronized "
+         f"mean={s_mean:.0f}us max={s_max:.0f}us (reduced paper_lm_100m, "
+         f"update_every=4)")
+
+
 def bench_bytes_on_wire_per_refresh(P: int = 4) -> None:
     """Distributed-FD wire cost (ISSUE 6 acceptance row): bytes each device
     ships per refresh through the log-depth butterfly
@@ -458,6 +585,8 @@ def main(argv=None) -> None:
     bench_opt_step_time()
     bench_opt_step_time_multileaf()
     bench_opt_step_time_kernels()
+    bench_opt_step_time_async_refresh()
+    bench_lm_step_time_refresh_schedule()
     bench_bytes_on_wire_per_refresh()
     bench_opt_step_time_sharded_stats()
 

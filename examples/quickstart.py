@@ -53,6 +53,43 @@ benchmark row).  The update direction stays deterministic: with a 1-sized
 (or unbound) data axis the sharded path is bitwise-identical to replicated,
 and the merged sketch obeys the same FD error bound as a single-stream
 sketch of all shards' gradients (tests/test_distributed.py).
+
+Step-time knobs
+---------------
+Three independent knobs trade when the eigh-heavy refresh work happens for
+wall-clock step time; none of them changes the statistics stream:
+
+  * ``refresh_schedule`` — *which blocks* refresh each step.
+    ``"synchronized"`` (default) refreshes every pooled block every
+    ``update_every`` steps: one big eigh spike, cheapest mean step time.
+    ``"staggered"`` spreads ~N/update_every blocks across every step: same
+    amortized cost, flat step-time profile.  Measured end-to-end on the
+    reduced paper_lm_100m (``lm_step_time_refresh_schedule`` benchmark
+    row): staggered consistently cuts the worst-step spike (~1.7-2.3x
+    across runs) while mean step time stays within CPU run-to-run noise
+    (synchronized won 2 of 3 runs by ~10-15%), so synchronized stays the
+    default — pick staggered when stragglers/latency spikes hurt more
+    than throughput (e.g. a synchronous data-parallel pod where the
+    slowest step gates everyone).
+  * ``refresh_mode`` — *when* the refresh lands.  ``"inline"`` (default)
+    computes it on the step's critical path.  ``"async"`` launches it at
+    step t from the just-updated stats into a transient double-buffered
+    pending slot and commits it at step t+1, so the eigh (and the
+    distributed butterfly merge) overlap with the next step's
+    forward/backward; the update direction is one refresh stale, but the
+    committed statistics are bitwise step-shifted-equal to inline
+    (tests/test_async_refresh.py).  The direction's compiled critical path
+    drops every eigh call site (``opt_step_time_async_refresh`` row:
+    ~15x shorter at refresh boundaries on the multileaf CPU bench).
+  * ``profile_annotations=True`` — named_scope + profiler.TraceAnnotation
+    spans around update_stats/refresh/precondition/commit (and the
+    butterfly merge rounds), for reading the overlap off a profiler trace.
+
+``make_train_step`` jits with params and optimizer state DONATED
+(``donate_argnums=(0, 1)``): the step reuses the input buffers for its
+outputs, so even the async pending slot adds no steady-state copies beyond
+its double buffer.  Keep references out of donated trees (pass
+``donate=False`` if you must reuse an old state).
 """
 import collections
 
@@ -106,7 +143,7 @@ def main():
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))
-    step = jax.jit(make_train_step(cfg, tx))
+    step = make_train_step(cfg, tx)  # jitted + donated internally
 
     for t in range(50):
         if t == 30:  # runtime schedule change: decay lr 5x, no chain rebuild

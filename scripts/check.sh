@@ -11,6 +11,11 @@
 #   scripts/check.sh quant [extra args]       quantized second-moment pools
 #                                             (fp32 parity, int8/bf16,
 #                                             cross-dtype checkpoints)
+#   scripts/check.sh async [extra args]       async refresh pipeline:
+#                                             step-shifted parity matrix
+#                                             first (schedule x dtype x
+#                                             reduction), then donation +
+#                                             checkpoint droppability
 # Extra pytest args reach EVERY pytest invocation of the chosen tier,
 # including the kernels tier that the full tier runs first.
 # All tiers run a compileall syntax gate first so breakage surfaces before
@@ -37,6 +42,24 @@ quant_tier() {
   python -m pytest -x -q tests/test_quantize.py "$@"
 }
 
+async_tier() {
+  # parity FIRST: the step-shifted-equality matrix is the correctness
+  # contract of refresh_mode="async" — run it before the donation and
+  # checkpoint plumbing so a parity break fails the tier immediately
+  python -m pytest -x -q \
+    tests/test_async_refresh.py::test_async_committed_equals_inline \
+    tests/test_async_refresh.py::test_async_shampoo_parity \
+    tests/test_async_refresh.py::test_async_parity_under_sharded_stats \
+    "$@"
+  python -m pytest -x -q \
+    tests/test_async_refresh.py \
+    tests/test_trainer.py::test_train_step_donates_buffers \
+    --deselect tests/test_async_refresh.py::test_async_committed_equals_inline \
+    --deselect tests/test_async_refresh.py::test_async_shampoo_parity \
+    --deselect tests/test_async_refresh.py::test_async_parity_under_sharded_stats \
+    "$@"
+}
+
 if [[ "${1:-}" == "kernels" ]]; then
   shift
   kernels_tier "$@"
@@ -46,6 +69,12 @@ fi
 if [[ "${1:-}" == "quant" ]]; then
   shift
   quant_tier "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "async" ]]; then
+  shift
+  async_tier "$@"
   exit 0
 fi
 

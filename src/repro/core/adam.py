@@ -34,9 +34,13 @@ class AdamPreconditioner:
     diagonal: ClassVar[bool] = True
 
     def init_block(self, info: blocking.BlockInfo) -> AdamLeafStats:
-        zeros = jnp.zeros(info.shape, self.cfg.state_dtype)
-        return AdamLeafStats(mu=api.tag(zeros, "momentum"),
-                             nu=api.tag(zeros, "second_moment"))
+        # two distinct buffers: sharing one zeros array would be donated
+        # twice by the trainer's donate_argnums=(0, 1) step
+        return AdamLeafStats(
+            mu=api.tag(jnp.zeros(info.shape, self.cfg.state_dtype),
+                       "momentum"),
+            nu=api.tag(jnp.zeros(info.shape, self.cfg.state_dtype),
+                       "second_moment"))
 
     def update_stats(self, state, G, *, count):
         c = self.cfg

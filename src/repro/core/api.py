@@ -44,6 +44,7 @@ compute and restores them with ``tag_like`` after.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
 
@@ -70,6 +71,11 @@ class StateMeta:
     blocked: bool = False          # leading axis is the stacked-blocks dim
     param_index: Optional[int] = None  # flat index of the owning parameter
     shard: str = "auto"            # auto | blocks | param | replicate
+    # Transient leaves are re-derivable scratch (the async refresh pending
+    # slot): excluded from ``second_moment_bytes`` (they never hold the only
+    # copy of a statistic) and dropped by checkpoint save/restore
+    # (train/checkpoint.py zero-fills them on load).
+    transient: bool = False
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -147,10 +153,15 @@ def second_moment_bytes(state: PyTree) -> int:
     """Second-moment memory by metadata traversal — the paper's Fig. 1
     quantity (excludes grafting/momentum/derived preconditioners).  Works on
     any state pytree: a bare engine state, a named chain, a full injected
-    optimizer state, or shape structs from ``jax.eval_shape``."""
+    optimizer state, or shape structs from ``jax.eval_shape``.
+
+    Transient leaves (the async-refresh pending slot) are excluded: they
+    double-buffer statistics already counted in the live pools, so counting
+    them again would report the paper's Fig. 1 quantity double."""
     total = 0
     for meta, leaf in leaves_with_meta(state):
-        if meta is not None and meta.role == "second_moment":
+        if meta is not None and meta.role == "second_moment" \
+                and not meta.transient:
             total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
     return total
 
@@ -214,6 +225,7 @@ class Preconditioner(Protocol):
 
 REFRESH_SCHEDULES = ("synchronized", "staggered")
 STATS_REDUCTIONS = ("replicated", "sharded")
+REFRESH_MODES = ("inline", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,6 +269,23 @@ class EngineConfig:
     #     engine falls back to the replicated path bitwise.
     stats_reduction: str = "replicated"
     stats_axis: str = "data"
+    # When the refresh lands relative to the step that triggered it:
+    #   "inline" — the refreshed statistics precondition the SAME step's
+    #     gradient (the parity default, bitwise-pinned to the references).
+    #   "async"  — the refresh for step t's cohort is *launched* at t into a
+    #     double-buffered pending slot (``PrecondState.pending``) and
+    #     *committed* at t+1: the parameter update at t preconditions with
+    #     the pre-refresh (one-step-stale) statistics, so the eigh and the
+    #     butterfly merge rounds have no data dependency on the update
+    #     direction and XLA is free to overlap them with the next step's
+    #     forward/backward.  The committed statistics at step t+1 equal
+    #     inline's at step t exactly (step-shifted parity, including int8
+    #     storage: the pending slot is quantized with the step-t keys).
+    refresh_mode: str = "inline"
+    # Emit jax.named_scope + jax.profiler.TraceAnnotation spans around the
+    # engine's update_stats / refresh-launch / commit / precondition phases
+    # so the refresh leaving the critical path is visible in a device trace.
+    profile_annotations: bool = False
     state_dtype: Any = jnp.float32
     # OCO learners (S-AdaGrad, Alg. 2) precondition a d-vector with a full
     # d x d sketch: treat 1-D leaves as a single (d, 1) matrix block instead
@@ -280,6 +309,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown stats_reduction {self.stats_reduction!r}; "
                 f"expected one of {STATS_REDUCTIONS}")
+        if self.refresh_mode not in REFRESH_MODES:
+            raise ValueError(
+                f"unknown refresh_mode {self.refresh_mode!r}; "
+                f"expected one of {REFRESH_MODES}")
 
 
 class LeafState(NamedTuple):
@@ -291,13 +324,46 @@ class LeafState(NamedTuple):
     graft: Any          # Tagged grafting accumulator, or None
 
 
+class PendingSlot(NamedTuple):
+    """One shape group's in-flight refresh (``refresh_mode="async"``): the
+    refreshed stats stack launched at step t, in storage layout (same
+    quantized structure as ``PrecondState.pools[key]``, tags marked
+    ``transient``), plus a one-bit valid flag.  ``valid=False`` — the init
+    state, or a checkpoint restore that dropped the slot — makes the commit
+    a no-op and the engine falls back to the on-schedule refresh."""
+    stats: Any          # storage-layout stack, transient StateMeta tags
+    valid: Tagged       # bool scalar, role="count", transient
+
+
 class PrecondState(NamedTuple):
     """Engine state: one packed stats stack per unique block shape (keyed by
     ``pool.group_key``; leading dim spans every matrix block in the model)
-    plus the per-leaf residue."""
+    plus the per-leaf residue.  ``pending`` is ``None`` under
+    ``refresh_mode="inline"`` (contributing no pytree leaves, so inline
+    checkpoints/manifests are unchanged) and a ``{group key: PendingSlot}``
+    dict under ``"async"``."""
     count: Tagged
     pools: dict         # group key -> stats pytree (Tagged, leading dim N)
     leaves: tuple       # LeafState per flat param leaf
+    pending: Any = None  # async refresh double-buffer, or None (inline)
+
+
+def committed_pools(state: PrecondState) -> dict:
+    """The storage-layout pools the NEXT update will precondition from.
+
+    Inline mode: the live pools.  Async mode: each group's pending refresh
+    committed over the live stack where its valid bit is set — exactly the
+    select the engine performs at the top of the next step, so async state
+    after step t satisfies ``committed_pools(async_t) == inline_t.pools``
+    bitwise (the step-shifted parity contract)."""
+    if state.pending is None:
+        return state.pools
+    out = {}
+    for key, live in state.pools.items():
+        slot = state.pending[key]
+        out[key] = tag_like(live, pool.commit_select(
+            slot.valid.value, untag(slot.stats), untag(live)))
+    return out
 
 
 def pool_stats(state: PrecondState, key: Optional[str] = None) -> Any:
@@ -355,6 +421,30 @@ def _batched_method(precond: "Preconditioner", name: str):
     per_block = getattr(precond, name)
     return lambda s, G, count: jax.vmap(
         lambda ss, GG: per_block(ss, GG, count=count))(s, G)
+
+
+def _mark_transient(tree: PyTree) -> PyTree:
+    """Copy of a tagged tree with every StateMeta marked ``transient`` — the
+    pending-slot layout: same structure/sharding as the live pools, excluded
+    from memory accounting and checkpoints."""
+    def one(x):
+        if _is_tagged(x):
+            return Tagged(x.value,
+                          dataclasses.replace(x.meta, transient=True))
+        return x
+    return jax.tree.map(one, tree, is_leaf=_is_tagged)
+
+
+@contextlib.contextmanager
+def _span(name: str, enabled: bool):
+    """Profiling span: a ``jax.named_scope`` (HLO op metadata — shows up in
+    device traces, zero runtime cost) plus a ``jax.profiler.TraceAnnotation``
+    (host-side trace event).  Disabled => pure passthrough."""
+    if not enabled:
+        yield
+        return
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
 
 
 def _index_unblocked(tree: PyTree, i: int) -> PyTree:
@@ -449,7 +539,20 @@ def scale_by_preconditioner(precond: Preconditioner,
                     graft = tag(jnp.zeros(p.shape, cfg.state_dtype),
                                 "grafting", param_index=i)
                 leaves.append(LeafState(stats=None, graft=graft))
-        return PrecondState(count=count, pools=pools, leaves=tuple(leaves))
+        pending = None
+        if cfg.refresh_mode == "async":
+            # double buffer: same storage layout (and therefore sharding)
+            # as the live pools, transient tags => not counted, not saved.
+            # Fresh zero arrays, NOT references to the live pool buffers —
+            # donated opt_state must not contain the same buffer twice.
+            pending = {
+                key: PendingSlot(
+                    stats=_mark_transient(jax.tree.map(jnp.zeros_like, stack)),
+                    valid=Tagged(jnp.zeros([], bool),
+                                 StateMeta(role="count", transient=True)))
+                for key, stack in pools.items()}
+        return PrecondState(count=count, pools=pools, leaves=tuple(leaves),
+                            pending=pending)
 
     def refresh_group(grp: pool.PoolGroup, raw, gb, count, vrefresh):
         """Gated refresh over one packed stack (raw = untagged stats);
@@ -546,17 +649,59 @@ def scale_by_preconditioner(precond: Preconditioner,
         else:
             vrefresh = lambda s, G: refresh_sharded_b(
                 s, G, count=count, axis=cfg.stats_axis, axis_size=axis_size)
+        is_async = cfg.refresh_mode == "async" and state.pending is not None
+        spans = cfg.profile_annotations
         new_pools, pooled_dirs = {}, {}
+        new_pending = {} if is_async else None
         for gi, grp in enumerate(index.groups):
             gb = packed[grp.key]
             gb_stats = packed_stats[grp.key]
-            raw = quantize.dequantize_pool(state.pools[grp.key])
-            raw = update_stats_b(raw, gb_stats, count)
-            raw = refresh_group(grp, raw, gb_stats, count, vrefresh)
-            pooled_dirs[grp.key] = precondition_b(raw, gb, count)
             gkey = None if qkey is None else jax.random.fold_in(qkey, gi)
+            if not is_async:
+                raw = quantize.dequantize_pool(state.pools[grp.key])
+                with _span("precond/update_stats", spans):
+                    raw = update_stats_b(raw, gb_stats, count)
+                with _span("precond/refresh", spans):
+                    raw = refresh_group(grp, raw, gb_stats, count, vrefresh)
+                with _span("precond/precondition", spans):
+                    pooled_dirs[grp.key] = precondition_b(raw, gb, count)
+                new_pools[grp.key] = quantize.requantize_pool(
+                    state.pools[grp.key], raw, key=gkey)
+                continue
+            # async one-step-stale pipeline.  Per step t:
+            #   1. commit: fold the refresh launched at t-1 (pending slot)
+            #      over the live stack — a cheap elementwise select in
+            #      storage layout, no eigh on this path;
+            #   2. accumulate this step's statistics on the committed stack;
+            #   3. precondition with those PRE-refresh stats — the update
+            #      direction has no data dependency on this step's refresh,
+            #      so the eigh + merge rounds below are free to overlap with
+            #      the next step's forward/backward;
+            #   4. launch: run the (gated) refresh into the pending slot,
+            #      committed at t+1.
+            # The commit therefore lands exactly what inline computed at t-1
+            # (same refresh, same quantization keys), one step later.
+            slot = state.pending[grp.key]
+            live = state.pools[grp.key]
+            with _span("precond/commit", spans):
+                committed = tag_like(live, pool.commit_select(
+                    slot.valid.value, untag(slot.stats), untag(live)))
+            raw = quantize.dequantize_pool(committed)
+            with _span("precond/update_stats", spans):
+                raw = update_stats_b(raw, gb_stats, count)
+            with _span("precond/precondition", spans):
+                pooled_dirs[grp.key] = precondition_b(raw, gb, count)
+            with _span("precond/refresh_launch", spans):
+                refreshed = refresh_group(grp, raw, gb_stats, count, vrefresh)
+            # live stack stores the pre-refresh stats, pending the refreshed
+            # ones — both under the step-t quantization keys, so whichever
+            # side the next commit selects is bitwise what inline stored
             new_pools[grp.key] = quantize.requantize_pool(
-                state.pools[grp.key], raw, key=gkey)
+                live, raw, key=gkey)
+            new_pending[grp.key] = PendingSlot(
+                stats=quantize.requantize_pool(slot.stats, refreshed,
+                                               key=gkey),
+                valid=Tagged(jnp.ones([], bool), slot.valid.meta))
 
         # Per-leaf residue: diag fallback, grafting norms, gating.
         out, new_leaves = [], []
@@ -606,7 +751,8 @@ def scale_by_preconditioner(precond: Preconditioner,
 
         return (jax.tree.unflatten(treedef, out),
                 PrecondState(count=new_count, pools=new_pools,
-                             leaves=tuple(new_leaves)))
+                             leaves=tuple(new_leaves),
+                             pending=new_pending))
 
     return GradientTransformation(init_fn, update_fn)
 

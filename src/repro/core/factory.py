@@ -46,6 +46,13 @@ class OptimizerConfig:
     # synchronized reproduces the seed exactly; staggered spreads the eigh
     # cost uniformly (one 1/update_every slice of blocks per step).
     refresh_schedule: str = "synchronized"
+    # when the refresh lands (core/api.py): "inline" (same step, parity
+    # default) | "async" (launched at t into a double-buffered pending
+    # slot, committed at t+1 — eigh + merge leave the step's critical path)
+    refresh_mode: str = "inline"
+    # profiling spans around the engine's update/refresh/precondition
+    # phases (jax.named_scope + profiler.TraceAnnotation)
+    profile_annotations: bool = False
     # diagonal-fallback damping for vector/scalar leaves; None keeps the
     # historical graft_eps coupling (seed parity).
     diag_eps: Optional[float] = None
@@ -70,7 +77,10 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             rank=cfg.rank, block_size=cfg.block_size, beta2=beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
-            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
+            refresh_schedule=cfg.refresh_schedule,
+            refresh_mode=cfg.refresh_mode,
+            profile_annotations=cfg.profile_annotations,
+            diag_eps=cfg.diag_eps,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype,
             stats_reduction=cfg.stats_reduction))
@@ -79,7 +89,10 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             block_size=cfg.block_size, beta2=beta2,
             root_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
-            refresh_schedule=cfg.refresh_schedule, diag_eps=cfg.diag_eps,
+            refresh_schedule=cfg.refresh_schedule,
+            refresh_mode=cfg.refresh_mode,
+            profile_annotations=cfg.profile_annotations,
+            diag_eps=cfg.diag_eps,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype))
     if cfg.name == "adam":

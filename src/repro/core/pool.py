@@ -25,6 +25,7 @@ import dataclasses
 import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import blocking
@@ -145,3 +146,23 @@ def block_ids(group: PoolGroup) -> jnp.ndarray:
     """Global block positions within a group stack — the staggered-refresh
     phase source (core/api.py)."""
     return jnp.arange(group.num_blocks, dtype=jnp.int32)
+
+
+def commit_select(valid, pending, live):
+    """Storage-level commit of an in-flight refresh cohort
+    (``refresh_mode="async"``, core/api.py): where ``valid``, take the
+    pending stack, else keep the live one.
+
+    ``pending``/``live`` are two congruent (untagged) stat trees in storage
+    layout; ``valid`` is a scalar bool (one in-flight cohort per group) or a
+    per-block ``(N,)`` mask — scalars broadcast over every leaf, a mask is
+    rank-expanded to each leaf's trailing dims.  This is an elementwise
+    select: no gather/scatter, no eigh, nothing on the critical path but a
+    ``jnp.where`` per leaf.
+    """
+    def sel(p, l):
+        v = valid
+        if getattr(v, "ndim", 0) == 1 and p.ndim >= 1:
+            v = v.reshape(v.shape + (1,) * (p.ndim - 1))
+        return jnp.where(v, p, l)
+    return jax.tree.map(sel, pending, live)

@@ -48,6 +48,13 @@ class SketchyConfig:
     diag_eps: Optional[float] = None      # diag-fallback damping (None => graft_eps)
     graft: str = "rmsprop_normalized"     # rmsprop_normalized | rmsprop | none
     refresh_schedule: str = "synchronized"  # synchronized | staggered
+    # "inline" (parity default) | "async": launch the FD refresh at step t
+    # from the just-updated stats, commit it at t+1 — the eigh and the
+    # butterfly merge rounds leave the update direction's critical path
+    # (engine refresh pipeline, core/api.py)
+    refresh_mode: str = "inline"
+    # profiling spans around the engine phases (core/api.py _span)
+    profile_annotations: bool = False
     exponent: float = -0.25         # per-side inverse root (Alg. 3)
     state_dtype: Any = jnp.float32
     # kernel backend for the pooled hot path (engine-resolved KernelSet):
@@ -183,6 +190,8 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
             start_preconditioning_step=cfg.start_preconditioning_step,
             graft=cfg.graft, graft_eps=cfg.graft_eps, diag_eps=cfg.diag_eps,
             refresh_schedule=cfg.refresh_schedule,
+            refresh_mode=cfg.refresh_mode,
+            profile_annotations=cfg.profile_annotations,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype,
             stats_reduction=cfg.stats_reduction,

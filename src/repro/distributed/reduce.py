@@ -114,27 +114,29 @@ def butterfly_merge_fd(state: FDState, *, axis: str, axis_size: int,
         return state
     ell = state.eigvecs.shape[-1]
     if axis_size & (axis_size - 1):
-        merged = _gather_shrink(state, axis=axis, axis_size=axis_size,
-                                ell=ell, kernels=kernels,
-                                wire_dtype=wire_dtype)
+        with jax.named_scope("butterfly_merge_fd/gather_shrink"):
+            merged = _gather_shrink(state, axis=axis, axis_size=axis_size,
+                                    ell=ell, kernels=kernels,
+                                    wire_dtype=wire_dtype)
     else:
         idx = jax.lax.axis_index(axis)
         merged = state
         dist = 1
         while dist < axis_size:
-            wire = sketch_merge.pack_wire(merged, wire_dtype)
-            perm = [(i, i ^ dist) for i in range(axis_size)]
-            other = jax.lax.ppermute(wire, axis, perm)
-            # merge in axis-index order so both partners of a pair compute
-            # the bitwise-identical result (concatenation order matters to
-            # the eigh)
-            is_low = (idx & dist) == 0
-            lo = jax.tree.map(lambda a, b: jnp.where(is_low, a, b),
-                              wire, other)
-            hi = jax.tree.map(lambda a, b: jnp.where(is_low, b, a),
-                              wire, other)
-            merged = sketch_merge.merge_wire(lo, hi, ell=ell,
-                                             kernels=kernels)
+            with jax.named_scope(f"butterfly_merge_fd/round_d{dist}"):
+                wire = sketch_merge.pack_wire(merged, wire_dtype)
+                perm = [(i, i ^ dist) for i in range(axis_size)]
+                other = jax.lax.ppermute(wire, axis, perm)
+                # merge in axis-index order so both partners of a pair
+                # compute the bitwise-identical result (concatenation order
+                # matters to the eigh)
+                is_low = (idx & dist) == 0
+                lo = jax.tree.map(lambda a, b: jnp.where(is_low, a, b),
+                                  wire, other)
+                hi = jax.tree.map(lambda a, b: jnp.where(is_low, b, a),
+                                  wire, other)
+                merged = sketch_merge.merge_wire(lo, hi, ell=ell,
+                                                 kernels=kernels)
             dist *= 2
     return FDState(eigvecs=merged.eigvecs.astype(state.eigvecs.dtype),
                    eigvals=merged.eigvals.astype(state.eigvals.dtype),

@@ -83,8 +83,11 @@ def lower_cell(cfg: ModelConfig, shape: registry.ShapeCfg,
         osh = trainer_lib.train_state_shardings(ostruct, pstruct, rules)
         bstruct = registry.input_specs(cfg, shape)
         bsh = batch_shardings(bstruct, rules)
+        # donate=False: we re-jit below with explicit shardings (and our own
+        # donate_argnums) — the raw callable is what lower() needs
         step = trainer_lib.make_train_step(cfg, tx, unroll=unroll,
-                                           microbatches=microbatches)
+                                           microbatches=microbatches,
+                                           donate=False)
         jf = jax.jit(step, in_shardings=(psh, osh, bsh),
                      out_shardings=(psh, osh, None),
                      donate_argnums=(0, 1) if donate else ())

@@ -37,6 +37,22 @@ def main() -> None:
                         "between steps (core/quantize.py): fp32 = bitwise "
                         "parity, bf16 = 2x smaller, int8 = per-block "
                         "quantized matrix factors (~4x); compute stays f32")
+    p.add_argument("--refresh-schedule", default="synchronized",
+                   choices=["synchronized", "staggered"],
+                   help="refresh phasing over the pooled block stacks: "
+                        "synchronized = all blocks every update-every steps "
+                        "(eigh spike); staggered = ~N/update_every blocks "
+                        "per step, same amortized cost, flat step time")
+    p.add_argument("--refresh-mode", default="inline",
+                   choices=["inline", "async"],
+                   help="when the refresh lands (core/api.py): inline = "
+                        "same step (parity default); async = launched at "
+                        "step t into a double-buffered pending slot and "
+                        "committed at t+1, so the eigh + butterfly merge "
+                        "overlap with the next step's forward/backward")
+    p.add_argument("--profile-annotations", action="store_true",
+                   help="emit named_scope/TraceAnnotation spans around the "
+                        "engine's update/refresh/precondition phases")
     p.add_argument("--stats-reduction", default="replicated",
                    choices=["replicated", "sharded"],
                    help="second-moment maintenance across data-parallel "
@@ -72,6 +88,9 @@ def main() -> None:
         rank=args.rank, block_size=args.block_size,
         update_every=args.update_every, weight_decay=1e-4,
         kernel_backend=args.kernel_backend,
+        refresh_schedule=args.refresh_schedule,
+        refresh_mode=args.refresh_mode,
+        profile_annotations=args.profile_annotations,
         second_moment_dtype=args.second_moment_dtype,
         stats_reduction=args.stats_reduction)
     tx = make_optimizer(opt_cfg)
@@ -104,7 +123,9 @@ def main() -> None:
         else:
             print(f"sharded stats requested but devices={ndev} "
                   f"batch={args.batch}; falling back to replicated")
-    step_fn = jax.jit(make_train_step(cfg, tx, data_parallel_mesh=dp_mesh))
+    # make_train_step jits with params/opt_state donated; the async
+    # checkpointer snapshots to host before the next step consumes them
+    step_fn = make_train_step(cfg, tx, data_parallel_mesh=dp_mesh)
     monitor = StragglerMonitor()
     metrics_log = []
 

@@ -76,11 +76,26 @@ def _meta_records(tree: PyTree):
     return out
 
 
+def _transient_flags(tree: PyTree):
+    """Per-leaf ``StateMeta.transient`` booleans, aligned with the full
+    flatten.  Transient leaves (the async-refresh pending double buffer,
+    core/api.py) are derived state: dropped on save, zero-filled on restore
+    — so manifests are identical across ``refresh_mode`` and checkpoints
+    move freely between inline and async runs."""
+    return [meta is not None and getattr(meta, "transient", False)
+            for meta, _ in api.leaves_with_meta(tree)]
+
+
 def save(directory: str, step: int, state: PyTree, *,
          extra: Optional[dict] = None) -> str:
-    """Synchronous atomic save. Returns the final path."""
+    """Synchronous atomic save. Returns the final path.  Transient leaves
+    (pending refresh double buffer) are not written — a checkpoint from an
+    async run is byte-identical in structure to an inline run's."""
     named, _ = _flatten_with_names(state)
     metas = _meta_records(state)
+    trans = _transient_flags(state)
+    named = [nl for nl, t in zip(named, trans) if not t]
+    metas = [m for m, t in zip(metas, trans) if not t]
     tmp = os.path.join(directory, f"tmp-{step}")
     final = os.path.join(directory, f"step-{step}")
     if os.path.exists(tmp):
@@ -361,7 +376,14 @@ def _migrate_quantized(path: str, manifest: dict, named: list,
 def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
             shardings: Optional[PyTree] = None) -> tuple[PyTree, int, dict]:
     """Load into the structure of ``template``; reshard onto ``shardings``
-    (same treedef) if given. Returns (state, step, extra)."""
+    (same treedef) if given. Returns (state, step, extra).
+
+    Transient template leaves are never looked up in the checkpoint (save
+    dropped them): they restore as zeros.  For the async pending slot this
+    zeroes the ``valid`` flag, so the first post-restore commit is a no-op
+    and the pipeline re-primes itself on the normal refresh schedule —
+    inline checkpoints restore into async runs (and vice versa) unchanged.
+    """
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {directory}")
@@ -369,34 +391,40 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
-    named, treedef = _flatten_with_names(template)
-    metas = _meta_records(template)
+    named_all, treedef = _flatten_with_names(template)
+    trans = _transient_flags(template)
+    sh_all = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+        if shardings is not None else [None] * len(named_all))
+    named = [nl for nl, t in zip(named_all, trans) if not t]
+    metas = [m for m, t in zip(_meta_records(template), trans) if not t]
+
+    def assemble(kept_arrays):
+        """Interleave loaded leaves with zero-filled transient slots and
+        unflatten, device_putting onto the full sharding assignment."""
+        it = iter(kept_arrays)
+        leaves = []
+        for (name, tmpl), t, sh in zip(named_all, trans, sh_all):
+            arr = np.zeros(tuple(np.shape(tmpl)), np.dtype(tmpl.dtype)) \
+                if t else next(it)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        return (jax.tree_util.tree_unflatten(treedef, leaves), step,
+                manifest.get("extra", {}))
+
     if [n for n, _ in named] != [r["name"] for r in manifest["leaves"]]:
         migrated = _migrate_pre_pool(path, manifest, named, metas)
         if migrated is None:
             migrated = _migrate_quantized(path, manifest, named, metas)
         if migrated is not None:
-            sh_flat = (jax.tree.leaves(
-                shardings,
-                is_leaf=lambda x: hasattr(x, "addressable_devices"))
-                if shardings is not None else [None] * len(named))
-            leaves = [jax.device_put(a, sh) if sh is not None
-                      else jax.numpy.asarray(a)
-                      for a, sh in zip(migrated, sh_flat)]
-            return (jax.tree_util.tree_unflatten(treedef, leaves), step,
-                    manifest.get("extra", {}))
+            return assemble(migrated)
     if len(named) != len(manifest["leaves"]):
         raise ValueError(
             f"checkpoint has {len(manifest['leaves'])} leaves, template has "
             f"{len(named)} — incompatible structures")
 
-    sh_flat = (jax.tree.leaves(
-        shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
-        if shardings is not None else [None] * len(named))
-
-    leaves = []
-    for (name, tmpl), meta, rec, sh in zip(named, metas, manifest["leaves"],
-                                           sh_flat):
+    loaded = []
+    for (name, tmpl), meta, rec in zip(named, metas, manifest["leaves"]):
         if name != rec["name"]:
             raise ValueError(f"leaf mismatch: {name} vs {rec['name']}")
         rec_meta = rec.get("meta")
@@ -405,13 +433,8 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
             raise ValueError(
                 f"state-role mismatch at {name}: checkpoint has "
                 f"{rec_meta['role']!r}, template expects {meta['role']!r}")
-        arr = _cast_to_template(_load_rec(path, rec), tmpl)
-        if sh is not None:
-            leaves.append(jax.device_put(arr, sh))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
-    return (jax.tree_util.tree_unflatten(treedef, leaves), step,
-            manifest.get("extra", {}))
+        loaded.append(_cast_to_template(_load_rec(path, rec), tmpl))
+    return assemble(loaded)
 
 
 class AsyncCheckpointer:

@@ -36,8 +36,18 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
                     unroll: bool = False,
                     microbatches: Optional[int] = None,
                     data_parallel_mesh=None,
-                    dp_axes: Optional[tuple] = None) -> Callable:
-    """Build the jit-able train step.
+                    dp_axes: Optional[tuple] = None,
+                    donate: bool = True) -> Callable:
+    """Build the train step.  By default the returned function is jitted
+    with ``params`` and ``opt_state`` DONATED (``donate_argnums=(0, 1)``):
+    XLA reuses the input buffers for the outputs, so the step allocates no
+    second copy of the model or optimizer state — in particular the async
+    refresh pending slot (``EngineConfig.refresh_mode="async"``) adds zero
+    steady-state copies on top of its double buffer.  Callers must not
+    touch a ``params``/``opt_state`` value after passing it in (the arrays
+    are deleted); pass ``donate=False`` to get the raw un-jitted callable
+    (inputs preserved — reference comparisons, custom ``jax.jit`` wrappers
+    with explicit shardings).
 
     With ``data_parallel_mesh`` the whole step runs inside the
     ``sharding/rules.shard_map`` wrapper with the batch split over
@@ -99,6 +109,8 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
         return new_params, new_opt_state, {"loss": loss, "grad_norm": gnorm}
 
     if data_parallel_mesh is None:
+        if donate:
+            return jax.jit(train_step, donate_argnums=(0, 1))
         return train_step
 
     from repro.distributed import reduce as dreduce
@@ -106,6 +118,8 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
     axes = rules_lib.dp_axis_names(mesh) if dp_axes is None else \
         tuple(a for a in dp_axes if a in mesh.axis_names)
     if not axes:
+        if donate:
+            return jax.jit(train_step, donate_argnums=(0, 1))
         return train_step
 
     def shard_body(params, opt_state, batch):
@@ -133,6 +147,8 @@ def make_train_step(cfg: ModelConfig, tx: GradientTransformation, *,
             out_specs=(P(), P(), P()), check_vma=False)
         return step(params, opt_state, batch)
 
+    if donate:
+        return jax.jit(sharded_train_step, donate_argnums=(0, 1))
     return sharded_train_step
 
 

@@ -261,7 +261,8 @@ def losses(stats_reduction, mesh):
         block_size=64, update_every=2, schedule="constant",
         stats_reduction=stats_reduction))
     p, s = params, tx.init(params)
-    step = jax.jit(make_train_step(cfg, tx, data_parallel_mesh=mesh))
+    # donate=False: the module-level `params` feeds both losses() runs
+    step = make_train_step(cfg, tx, data_parallel_mesh=mesh, donate=False)
     out = []
     for i in range(6):
         batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}

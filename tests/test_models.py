@@ -44,7 +44,8 @@ def test_forward_and_train_step(arch):
     tx = make_optimizer(OptimizerConfig(
         name="sketchy", learning_rate=1e-2, rank=8, block_size=32,
         update_every=1, total_steps=10, schedule="constant"))
-    step = jax.jit(make_train_step(cfg, tx))
+    # donate=False: the delta check below reads `params` after the step
+    step = jax.jit(make_train_step(cfg, tx, donate=False))
     state = tx.init(params)
     p2, state, metrics = step(params, state, batch)
     assert np.isfinite(float(metrics["loss"]))

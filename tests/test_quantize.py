@@ -162,7 +162,7 @@ def test_bf16_trains_paper_lm_within_tolerance_of_fp32():
         state = tx.init(params)
         data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                       global_batch=8))
-        step = jax.jit(make_train_step(cfg, tx))
+        step = make_train_step(cfg, tx)  # jitted + donated internally
         losses = []
         for t in range(steps):
             batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}

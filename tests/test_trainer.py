@@ -21,8 +21,9 @@ def test_microbatching_matches_full_batch():
                                   global_batch=8))
     batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
 
-    full = jax.jit(make_train_step(cfg, tx))
-    micro = jax.jit(make_train_step(cfg, tx, microbatches=4))
+    # donate=False: params/state feed both step functions
+    full = jax.jit(make_train_step(cfg, tx, donate=False))
+    micro = jax.jit(make_train_step(cfg, tx, microbatches=4, donate=False))
     p1, _, m1 = full(params, state, batch)
     p2, _, m2 = micro(params, state, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
@@ -42,10 +43,47 @@ def test_sketchy_trains_lm_loss_down():
     state = tx.init(params)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))
-    step = jax.jit(make_train_step(cfg, tx))
+    step = make_train_step(cfg, tx)  # jitted + donated internally
     losses = []
     for t in range(40):
         batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
         params, state, m = step(params, state, batch)
         losses.append(float(m["loss"]))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[:3] + losses[-3:]
+
+
+def test_train_step_donates_buffers():
+    """make_train_step donates params + opt_state: the inputs are deleted
+    after the call (XLA reused their buffers for the outputs) and the live
+    array population stays flat across steps — no extra steady-state copy
+    of the model or optimizer state, in either refresh mode."""
+    cfg = get_reduced("paper_lm_100m")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4))
+    for mode in ("inline", "async"):
+        tx = make_optimizer(OptimizerConfig(
+            name="sketchy", learning_rate=1e-3, rank=8, block_size=32,
+            update_every=2, total_steps=12, schedule="constant",
+            refresh_mode=mode))
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        state = tx.init(params)
+        step = make_train_step(cfg, tx)
+
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        old_p, old_s = params, state
+        params, state, _ = step(params, state, batch)
+        jax.block_until_ready(params)
+        # the donated inputs are gone — no second copy survives the step
+        assert all(x.is_deleted() for x in jax.tree.leaves(old_p)), mode
+        assert all(x.is_deleted() for x in jax.tree.leaves(old_s)), mode
+
+        counts = []
+        for t in range(1, 7):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+            params, state, m = step(params, state, batch)
+            jax.block_until_ready(m["loss"])
+            counts.append(sum(not a.is_deleted() for a in jax.live_arrays()))
+        # steady state: the live-array population does not grow step over
+        # step (donation means outputs alias inputs, nothing accumulates)
+        assert max(counts) - min(counts) <= 2, (mode, counts)
+        del params, state, old_p, old_s, tx, step
