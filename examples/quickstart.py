@@ -54,6 +54,38 @@ benchmark row).  The update direction stays deterministic: with a 1-sized
 and the merged sketch obeys the same FD error bound as a single-stream
 sketch of all shards' gradients (tests/test_distributed.py).
 
+Kernel tuning knobs
+-------------------
+The pooled hot path (batched gram + fused low-rank apply over packed
+``(N, bs_m, bs_n)`` stacks) runs through the kernel registry
+(``kernels/registry.py``); three knobs control how those kernels execute:
+
+  * ``kernel_backend`` — ``"auto"`` (default: Pallas on TPU, XLA batched
+    refs elsewhere; ``REPRO_KERNEL_BACKEND`` env overrides), ``"pallas"``,
+    or ``"xla"``.
+  * Tile configs come from the shape-aware autotuner
+    (``kernels/autotune.py``): each Pallas entry point looks up a measured
+    ``(bn_stack, bk, bd, bn)`` winner for its exact (platform, kernel,
+    padded pool shape, storage dtype) at *trace* time — tuned steps pay
+    zero per-step lookup cost.  ``REPRO_TUNE_MODE`` picks the policy:
+    ``"auto"`` (default: use the committed ``kernels/tune_cache.json``
+    fixture, fall back to safe defaults on a miss), ``"off"`` (always
+    defaults — the pinned-parity baseline), or ``"force"`` (measure and
+    persist on every miss).  ``REPRO_TUNE_CACHE`` points at an alternative
+    cache file; ``python -m repro.kernels.autotune tune|show|validate``
+    maintains one from the command line, and the ``opt_step_time_autotuned``
+    benchmark row tracks the payoff vs the untuned defaults.
+  * ``quantized_epilogue`` — with ``second_moment_dtype="int8"``, ``"auto"``
+    (default) fuses dequantize/requantize into the Pallas kernels whenever
+    the pallas backend is resolved and stats are replicated: the int8 pool
+    containers flow straight into the batched FD methods (scale-folded
+    gram/apply, in-kernel requantized eigenvector stacks), so the f32
+    factor stack is never materialized at the pool boundary.  ``"off"``
+    always dequantizes at the boundary (the PR-4 baseline numerics);
+    ``"on"`` forces the fused math on any backend (the XLA mirror of the
+    same scale-folded computation — useful for A/B-ing numerics).  Sketchy
+    only; shampoo's root solve keeps f32 factors.
+
 Step-time knobs
 ---------------
 Three independent knobs trade when the eigh-heavy refresh work happens for

@@ -13,6 +13,9 @@ Compares a fresh ``benchmarks/run.py --json`` output against the committed
   * ``opt_step_time_*`` — wall-time rows.  Gated on ``us_per_call`` with a
     multiplicative tolerance (default 1.75x) because shared CI runners are
     noisy; tighten locally with ``--time-tolerance``.
+  * ``opt_overhead_vs_adam`` — the sketchy/adam step-cost ratio parsed from
+    ``ratio=<x>x`` in the derived column.  Unitless, so runner speed cancels
+    out; gated with the same multiplicative tolerance as the time rows.
 
 ``--only memory`` gates just the byte-exact rows (fig1_memory_*,
 bytes_on_wire_*) — CI runs these as a BLOCKING step; ``--only time`` gates
@@ -36,6 +39,7 @@ import re
 import sys
 
 _BYTES = re.compile(r"^(\d+)B\b")
+_RATIO = re.compile(r"\bratio=([\d.]+)x")
 
 
 def _rows(path: str) -> dict:
@@ -46,6 +50,11 @@ def _rows(path: str) -> dict:
 def _bytes_of(row: dict):
     m = _BYTES.match(row.get("derived", ""))
     return int(m.group(1)) if m else None
+
+
+def _ratio_of(row: dict):
+    m = _RATIO.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
 
 
 def main(argv=None) -> int:
@@ -84,6 +93,15 @@ def main(argv=None) -> int:
             elif fb > bb:
                 failures.append(
                     f"{name}: gated bytes regressed {bb} -> {fb}")
+        elif name == "opt_overhead_vs_adam" and gate_time:
+            br, fr = _ratio_of(b), _ratio_of(f)
+            if br is None or fr is None:
+                failures.append(f"{name}: unparseable ratio "
+                                f"({b['derived']!r} vs {f['derived']!r})")
+            elif fr > br * args.time_tolerance:
+                failures.append(
+                    f"{name}: sketchy/adam ratio regressed {br:.2f}x -> "
+                    f"{fr:.2f}x (> {args.time_tolerance}x tolerance)")
         elif name.startswith("opt_step_time") and gate_time:
             ratio = f["us_per_call"] / max(b["us_per_call"], 1e-9)
             if ratio > args.time_tolerance:

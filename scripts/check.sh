@@ -16,6 +16,12 @@
 #                                             first (schedule x dtype x
 #                                             reduction), then donation +
 #                                             checkpoint droppability
+#   scripts/check.sh tune [extra args]        kernel autotuner: candidate-
+#                                             sweep parity vs XLA refs,
+#                                             cache modes + round-trip,
+#                                             fused-epilogue jaxpr pins,
+#                                             then the committed fixture's
+#                                             schema validation
 # Extra pytest args reach EVERY pytest invocation of the chosen tier,
 # including the kernels tier that the full tier runs first.
 # All tiers run a compileall syntax gate first so breakage surfaces before
@@ -72,9 +78,25 @@ if [[ "${1:-}" == "quant" ]]; then
   exit 0
 fi
 
+tune_tier() {
+  # every tile candidate in the autotuner's menu must match the XLA refs
+  # (hypothesis sweeps over ragged shapes/dtypes), cache modes and the
+  # reload round-trip must be deterministic, and the fused int8 epilogue's
+  # no-f32-materialization jaxpr pins must hold; finally the committed
+  # fixture is schema-validated against the candidate space
+  python -m pytest -x -q tests/test_autotune.py "$@"
+  python -m repro.kernels.autotune validate
+}
+
 if [[ "${1:-}" == "async" ]]; then
   shift
   async_tier "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "tune" ]]; then
+  shift
+  tune_tier "$@"
   exit 0
 fi
 

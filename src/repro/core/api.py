@@ -226,6 +226,7 @@ class Preconditioner(Protocol):
 REFRESH_SCHEDULES = ("synchronized", "staggered")
 STATS_REDUCTIONS = ("replicated", "sharded")
 REFRESH_MODES = ("inline", "async")
+QUANTIZED_EPILOGUES = ("auto", "off", "on")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,9 +255,23 @@ class EngineConfig:
     # Storage dtype for the pooled second-moment stacks BETWEEN steps
     # (core/quantize.py): "fp32" (identity, bitwise parity), "bf16" (2x), or
     # "int8" (per-block symmetric quantization of the matrix factors, ~4x).
-    # Compute always dequantizes to f32 at the batched-method boundary, so
-    # kernels and Preconditioner implementations never see quantized arrays.
+    # By default compute dequantizes to f32 at the batched-method boundary,
+    # so kernels and Preconditioner implementations never see quantized
+    # arrays; see ``quantized_epilogue`` for the fused exception.
     second_moment_dtype: str = "fp32"
+    # Fused int8 compute: hand the batched methods the QuantizedPool
+    # containers themselves (quantize.compute_view) instead of dequantizing
+    # the big factor stacks at the boundary — the implementation's batched
+    # methods dispatch to fused kernels that upcast int8 in-registers and
+    # re-quantize refreshed factors in-kernel, so the f32 stack never
+    # materializes in HBM.  "auto": on iff second_moment_dtype is int8, the
+    # resolved backend is pallas, the implementation opts in
+    # (``supports_quantized_compute``), and stats are replicated (the
+    # sharded merge needs f32 factors on the wire).  "off": always
+    # dequantize (the PR-4 behaviour).  "on": force the fused path on any
+    # backend (the xla refs implement the same fused entries — used by the
+    # CPU parity tests).
+    quantized_epilogue: str = "auto"
     # Second-moment maintenance across data-parallel shards
     # (src/repro/distributed/):
     #   "replicated" — every shard sees the dp-mean gradients and maintains
@@ -313,6 +328,10 @@ class EngineConfig:
             raise ValueError(
                 f"unknown refresh_mode {self.refresh_mode!r}; "
                 f"expected one of {REFRESH_MODES}")
+        if self.quantized_epilogue not in QUANTIZED_EPILOGUES:
+            raise ValueError(
+                f"unknown quantized_epilogue {self.quantized_epilogue!r}; "
+                f"expected one of {QUANTIZED_EPILOGUES}")
 
 
 class LeafState(NamedTuple):
@@ -473,6 +492,19 @@ def scale_by_preconditioner(precond: Preconditioner,
     qdtype = cfg.second_moment_dtype
     precond = _inject_kernels(precond,
                               kernel_registry.get_kernels(cfg.kernel_backend))
+    # Fused int8 compute resolution (build time, like the backend itself):
+    # the batched methods receive quantize.compute_view (containers kept)
+    # instead of quantize.dequantize_pool (f32 at the boundary).
+    fused_q = (
+        qdtype == "int8"
+        and cfg.quantized_epilogue != "off"
+        and getattr(precond, "supports_quantized_compute", False)
+        and cfg.stats_reduction != "sharded"
+        and (cfg.quantized_epilogue == "on"
+             or kernel_registry.resolve_backend(cfg.kernel_backend)
+             == "pallas"))
+    pool_compute = quantize.compute_view if fused_q \
+        else quantize.dequantize_pool
     update_stats_b = _batched_method(precond, "update_stats")
     refresh_b = _batched_method(precond, "refresh")
     precondition_b = _batched_method(precond, "precondition")
@@ -658,7 +690,7 @@ def scale_by_preconditioner(precond: Preconditioner,
             gb_stats = packed_stats[grp.key]
             gkey = None if qkey is None else jax.random.fold_in(qkey, gi)
             if not is_async:
-                raw = quantize.dequantize_pool(state.pools[grp.key])
+                raw = pool_compute(state.pools[grp.key])
                 with _span("precond/update_stats", spans):
                     raw = update_stats_b(raw, gb_stats, count)
                 with _span("precond/refresh", spans):
@@ -686,7 +718,7 @@ def scale_by_preconditioner(precond: Preconditioner,
             with _span("precond/commit", spans):
                 committed = tag_like(live, pool.commit_select(
                     slot.valid.value, untag(slot.stats), untag(live)))
-            raw = quantize.dequantize_pool(committed)
+            raw = pool_compute(committed)
             with _span("precond/update_stats", spans):
                 raw = update_stats_b(raw, gb_stats, count)
             with _span("precond/precondition", spans):

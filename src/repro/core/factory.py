@@ -61,6 +61,9 @@ class OptimizerConfig:
     # (per-block symmetric quantization of the matrix factors, ~4x).
     # Applies to sketchy and shampoo; adam's elementwise state is untouched.
     second_moment_dtype: str = "fp32"
+    # fused int8 compute (core/api.py quantized_epilogue): "auto" | "off" |
+    # "on" — sketchy only (shampoo's root solve needs f32 factors)
+    quantized_epilogue: str = "auto"
     # Second-moment maintenance across data-parallel shards
     # (src/repro/distributed/): "replicated" keeps every replica's
     # statistics identical from dp-mean gradients (parity default);
@@ -83,6 +86,7 @@ def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
             diag_eps=cfg.diag_eps,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype,
+            quantized_epilogue=cfg.quantized_epilogue,
             stats_reduction=cfg.stats_reduction))
     if cfg.name == "shampoo":
         return shampoo_lib.shampoo(shampoo_lib.ShampooConfig(

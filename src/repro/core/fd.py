@@ -113,8 +113,27 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
     (N, ell), rho (N,)); ``new_factor`` is (N, d, r).  With ``kernels`` the
     Gram goes through ``kernels.batched_gram`` (grid-over-N Pallas on TPU);
     without, the jnp expressions mirror ``jax.vmap(fd_update)`` exactly.
+
+    Quantized compute path: when ``state.eigvecs`` is a ``QuantizedPool``
+    (int8 values + per-block scale; the engine's fused int8 mode keeps the
+    storage container through the batched methods instead of dequantizing
+    at the boundary), the Gram and the eigenvector write-back run through
+    the fused quantized entries — the (N, d, ell) f32 eigenvector stack is
+    never materialized.  The per-block dequant scale and the sqrt-
+    eigenvalue ladder weights are both per-*column* of the small factor,
+    so they fold into one (N, ell) weight vector exactly:
+
+        B = dequant(Vq) sqrt(beta2 s) = Vq diag(colw),
+        colw = scale * sqrt(beta2 s).
+
+    The refreshed eigenvectors come back already re-quantized (the fused
+    epilogue's round-to-nearest matches ``quantize.quantize_stack`` with
+    no key), so the state returned here is a new ``QuantizedPool``.
     """
     U, s, rho = state
+    if _is_quantized(U):
+        return _fd_update_batched_quantized(U, s, rho, new_factor, beta2,
+                                            kernels)
     _, d, ell = U.shape
     if new_factor.ndim == 2:
         new_factor = new_factor[..., None]
@@ -148,6 +167,68 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
         eigvecs=U_new.astype(U.dtype),
         eigvals=s_new.astype(s.dtype),
         rho=(beta2 * rho + rho_t).astype(state.rho.dtype),
+    )
+
+
+def _is_quantized(x) -> bool:
+    """True when ``x`` is a core.quantize.QuantizedPool (lazy import — fd is
+    imported by modules below quantize in the package graph)."""
+    from repro.core import quantize
+    return isinstance(x, quantize.QuantizedPool)
+
+
+def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
+                                 ) -> FDState:
+    """``fd_update_batched`` with the eigenvector stack in int8 pool storage
+    end to end; see the caller's docstring for the scale-folding algebra."""
+    from repro.core import quantize
+
+    vq, scale = U.values, U.scale            # (N, d, ell) int8, (N, 1, 1)
+    N, d, ell = vq.shape
+    if new_factor.ndim == 2:
+        new_factor = new_factor[..., None]
+    A = new_factor.astype(jnp.float32)       # (N, d, r)
+
+    s_clamped = jnp.maximum(beta2 * s.astype(jnp.float32), 0.0)
+    colw = scale.reshape(N, 1) * jnp.sqrt(s_clamped)   # (N, ell)
+
+    if kernels is None:
+        m = jnp.concatenate(
+            [vq.astype(jnp.float32) * colw[:, None, :], A], axis=2)
+        C = jnp.matmul(jnp.swapaxes(m, -1, -2), m)
+    else:
+        C = kernels.batched_gram_mixed(vq, colw, A)
+    C = 0.5 * (C + jnp.swapaxes(C, -1, -2))
+
+    lam, V = jnp.linalg.eigh(C)             # ascending, batched
+    lam = jnp.maximum(lam[..., ::-1], 0.0)  # descending, clip tiny negatives
+    V = V[..., ::-1]
+
+    lam_top = lam[..., :ell]
+    rho_t = lam_top[..., ell - 1]           # (N,)
+
+    inv_sqrt = jnp.where(lam_top > 1e-30,
+                         jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
+    # U_new = M @ W with M = [Vq diag(colw), A]: split W by row block and
+    # fold the column weights into the top half so the projection consumes
+    # the raw int8 values directly
+    W = V[..., :ell] * inv_sqrt[:, None, :]           # (N, ell+r, ell)
+    w_top = colw[..., None] * W[..., :ell, :]         # (N, ell, ell)
+    w_bot = W[..., ell:, :]                           # (N, r, ell)
+
+    if kernels is None:
+        un = jnp.matmul(vq.astype(jnp.float32), w_top) + jnp.matmul(A, w_bot)
+        qp = quantize.quantize_stack(un)
+    else:
+        values, scale_new = kernels.batched_project_quantize(
+            vq, w_top, A, w_bot)
+        qp = quantize.QuantizedPool(values=values, scale=scale_new)
+
+    s_new = lam_top - rho_t[..., None]
+    return FDState(
+        eigvecs=qp,
+        eigvals=s_new.astype(s.dtype),
+        rho=(beta2 * rho + rho_t).astype(rho.dtype),
     )
 
 
@@ -299,10 +380,20 @@ def fd_apply_inverse_root_batched(state: FDState, G: jnp.ndarray, *,
     """``fd_apply_inverse_root`` over a packed pool stack (state leaves and
     G carry a leading pool dim N).  With ``kernels`` the fused apply goes
     through ``kernels.batched_lowrank_apply``; without, the jnp expressions
-    mirror ``jax.vmap(fd_apply_inverse_root)`` exactly."""
+    mirror ``jax.vmap(fd_apply_inverse_root)`` exactly.
+
+    A ``QuantizedPool`` eigenvector stack is consumed directly: the
+    per-block scale commutes out of ``U diag(c) U^T`` as ``scale^2``, so
+    the kernel path folds it into the coefficients and runs on the raw
+    int8 values (``kernels.batched_lowrank_apply_quantized``)."""
     base, coeffs = fd_inverse_root_coeffs(state, exponent=exponent, eps=eps)
     U = state.eigvecs
-    if kernels is not None:
+    if _is_quantized(U):
+        if kernels is not None:
+            return kernels.batched_lowrank_apply_quantized(
+                U.values, U.scale, coeffs, base, G)
+        U = U.values.astype(jnp.float32) * U.scale
+    elif kernels is not None:
         return kernels.batched_lowrank_apply(U, coeffs, base, G)
     proj = jnp.matmul(jnp.swapaxes(U, -1, -2), G)
     return base[..., None, None] * G + jnp.matmul(U, coeffs[..., None] * proj)

@@ -202,16 +202,50 @@ def dequantize_pool(stats: Any) -> Any:
     return jax.tree.map(one, stats, is_leaf=_is_node)
 
 
+def compute_view(stats: Any) -> Any:
+    """Storage-layout tree -> compute tree that KEEPS the int8 containers.
+
+    The fused quantized-compute engine path (core/api.py,
+    ``quantized_epilogue``) uses this instead of :func:`dequantize_pool`:
+    each ``QuantizedPool`` survives as an *untagged* ``QuantizedPool`` of
+    plain arrays, so the batched FD methods (core/fd.py) dispatch to the
+    fused int8 kernels and the f32 factor stack is never materialized at
+    the boundary.  Non-quantized leaves behave exactly like
+    ``dequantize_pool`` (bf16 second moments upcast to f32, everything
+    else untagged verbatim).
+    """
+    def one(x):
+        if isinstance(x, QuantizedPool):
+            return QuantizedPool(values=api.untag(x.values),
+                                 scale=api.untag(x.scale))
+        if isinstance(x, api.Tagged):
+            if x.meta.role == "second_moment":
+                return x.value.astype(jnp.float32)
+            return x.value
+        return x
+    return jax.tree.map(one, stats, is_leaf=_is_node)
+
+
 def requantize_pool(template: Any, raw: Any, *, key=None) -> Any:
-    """Computed f32 tree -> storage layout, with tags/containers from
-    ``template`` (the previous state).  ``raw`` must be the dequantized
-    structure — each QuantizedPool/Tagged node position holds one array.
+    """Computed tree -> storage layout, with tags/containers from
+    ``template`` (the previous state).  ``raw`` must be congruent with the
+    dequantized structure — each QuantizedPool/Tagged node position holds
+    one array, OR (fused quantized-compute path) an already-quantized
+    ``QuantizedPool`` produced in-kernel, which passes through with only
+    the template's tags re-attached (no second rounding).
     """
     flat_t, treedef = jax.tree.flatten(template, is_leaf=_is_node)
     flat_r = treedef.flatten_up_to(raw)
     out = []
     for i, (t, r) in enumerate(zip(flat_t, flat_r)):
         if isinstance(t, QuantizedPool):
+            if isinstance(r, QuantizedPool):
+                # fused epilogue already quantized this stack in-kernel:
+                # re-tag and store as-is (re-quantizing would double-round)
+                out.append(QuantizedPool(
+                    values=api.Tagged(api.untag(r.values), t.values.meta),
+                    scale=api.Tagged(api.untag(r.scale), t.scale.meta)))
+                continue
             sub = None if key is None else jax.random.fold_in(key, i)
             # absmax axes follow the template's scale shape: (N, 1, ..., 1)
             # per-block scales for pools, (1, ..., 1) whole-array scales for

@@ -73,6 +73,10 @@ class SketchyConfig:
     # "int8" (default, ~(ell-1)*d int8 per block per round) | "fp32"
     # (exact merge — the FD error bound holds with no quantization slack)
     stats_wire_dtype: str = "int8"
+    # fused int8 compute (core/api.py): "auto" (on when second_moment_dtype
+    # is int8, the pallas backend is resolved, and stats are replicated) |
+    # "off" (always dequantize at the boundary) | "on" (force; any backend)
+    quantized_epilogue: str = "auto"
 
 
 class SketchyBlockStats(NamedTuple):
@@ -98,6 +102,10 @@ class SketchyPreconditioner:
     kernels: Optional[KernelSet] = None
 
     diagonal: ClassVar[bool] = False
+    # the batched FD methods dispatch on QuantizedPool eigvec stacks
+    # (core/fd.py), so the engine's fused int8 mode can hand this
+    # preconditioner the storage containers directly
+    supports_quantized_compute: ClassVar[bool] = True
 
     def init_block(self, info: blocking.BlockInfo) -> SketchyBlockStats:
         ell_l = min(self.cfg.rank, info.bs_m)
@@ -194,6 +202,7 @@ def sketchy(cfg: SketchyConfig = SketchyConfig()) -> GradientTransformation:
             profile_annotations=cfg.profile_annotations,
             kernel_backend=cfg.kernel_backend,
             second_moment_dtype=cfg.second_moment_dtype,
+            quantized_epilogue=cfg.quantized_epilogue,
             stats_reduction=cfg.stats_reduction,
             stats_axis=cfg.stats_axis,
             state_dtype=cfg.state_dtype))

@@ -1,0 +1,477 @@
+"""Shape-aware tile autotuner for the batched Pallas kernels.
+
+PR 3 shipped the grid-over-N batched kernels with fixed tile defaults
+(``bn_stack=1``, ``bk=128``, ``bd=256``, ``bn=256``) — correct everywhere,
+optimal nowhere.  This module closes the ROADMAP's "``bn_stack``/tile
+tuning" item with a *measured* search: for each (platform, kernel, pool
+shape, storage dtype) it times every candidate ``TileConfig`` on
+synthetic operands of exactly that shape and records the winner in a
+persistent JSON cache.
+
+Resolution is cheap and happens at *trace* time: the registry's pallas
+entry points call :func:`get_config` with the operand shape while the
+engine's update function is being traced, so a tuned config costs zero
+per-step work — the jitted step simply bakes in different static tile
+arguments.
+
+Tune modes (``REPRO_TUNE_MODE``, default ``"auto"``):
+
+  * ``"off"``   — every lookup returns the defaults.  This is what keeps
+                  the untuned path bitwise-pinned: tile sizes change the
+                  f32 accumulation order, so the parity tests force
+                  ``"off"`` (or simply never commit entries for their
+                  shapes).
+  * ``"auto"``  — cache hit wins, miss falls back to the defaults.  No
+                  measurement ever runs implicitly; CI stays
+                  deterministic against the committed fixture.
+  * ``"force"`` — cache miss triggers an in-process measured search and
+                  the winner is persisted.  Intended for offline cache
+                  generation (the ``python -m repro.kernels.autotune``
+                  CLI, benchmarks); avoid inside traced code paths.
+
+The cache file defaults to the committed fixture next to this module
+(``tune_cache.json`` — CI validates it against the candidate-space
+schema); ``REPRO_TUNE_CACHE`` points lookups at a different path.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import itertools
+import json
+import os
+import time
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+TUNE_MODES = ("auto", "off", "force")
+ENV_CACHE = "REPRO_TUNE_CACHE"
+ENV_MODE = "REPRO_TUNE_MODE"
+DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "tune_cache.json")
+CACHE_VERSION = 1
+
+
+class TileConfig(NamedTuple):
+    """Static tile arguments of the batched kernels.
+
+    ``bn_stack`` (pool blocks per grid step) applies to every batched
+    kernel; ``bk``/``bd`` tile the Gram contraction; ``bn`` tiles the
+    low-rank apply's output columns.  Fields a kernel does not use are
+    pinned to the defaults so equivalent configs dedupe/intern cleanly.
+    """
+    bn_stack: int = 1
+    bk: int = 128
+    bd: int = 256
+    bn: int = 256
+
+
+DEFAULT_CONFIG = TileConfig()
+
+# kernel name -> which TileConfig fields it actually consumes
+KERNELS = ("batched_gram", "batched_gram_mixed", "batched_lowrank_apply",
+           "batched_project_quantize")
+
+_BN_STACK = (1, 2, 4, 8)
+_BK = (64, 128, 256)
+_BD = (128, 256, 512)
+_BN = (128, 256, 512)
+
+
+# --------------------------------------------------------------- candidates
+
+
+def effective(kernel: str, shape: tuple, config: TileConfig) -> TileConfig:
+    """Clamp a candidate to the shape exactly like the kernel will, and pin
+    unused fields to the defaults — so candidates that would compile the
+    same grid compare equal and dedupe."""
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; expected one of "
+                         f"{KERNELS}")
+    N = shape[0]
+    bn_stack = min(config.bn_stack, max(N, 1))
+    if kernel == "batched_gram":          # shape (N, d, k)
+        _, d, k = shape
+        return TileConfig(bn_stack=bn_stack, bk=min(config.bk, max(k, 1)),
+                          bd=min(config.bd, max(d, 1)), bn=DEFAULT_CONFIG.bn)
+    if kernel == "batched_gram_mixed":    # shape (N, d, k, r); d-tiled only
+        d = shape[1]
+        return TileConfig(bn_stack=bn_stack, bk=DEFAULT_CONFIG.bk,
+                          bd=min(config.bd, max(d, 1)), bn=DEFAULT_CONFIG.bn)
+    if kernel == "batched_lowrank_apply":  # shape (N, d, ell, n)
+        n = shape[3]
+        return TileConfig(bn_stack=bn_stack, bk=DEFAULT_CONFIG.bk,
+                          bd=DEFAULT_CONFIG.bd, bn=min(config.bn, max(n, 1)))
+    # batched_project_quantize: whole-block per grid step, only bn_stack
+    return TileConfig(bn_stack=bn_stack, bk=DEFAULT_CONFIG.bk,
+                      bd=DEFAULT_CONFIG.bd, bn=DEFAULT_CONFIG.bn)
+
+
+def candidates(kernel: str, shape: tuple) -> list:
+    """Deduped candidate TileConfigs for one (kernel, shape); the effective
+    default config is always first (ties in the measured search keep it)."""
+    menu = {"batched_gram": itertools.product(_BN_STACK, _BK, _BD),
+            "batched_gram_mixed": itertools.product(_BN_STACK, _BD),
+            "batched_lowrank_apply": itertools.product(_BN_STACK, _BN),
+            "batched_project_quantize": itertools.product(_BN_STACK)}
+    out = [effective(kernel, shape, DEFAULT_CONFIG)]
+    seen = set(out)
+    for combo in menu[kernel]:
+        if kernel == "batched_gram":
+            cand = TileConfig(bn_stack=combo[0], bk=combo[1], bd=combo[2])
+        elif kernel == "batched_gram_mixed":
+            cand = TileConfig(bn_stack=combo[0], bd=combo[1])
+        elif kernel == "batched_lowrank_apply":
+            cand = TileConfig(bn_stack=combo[0], bn=combo[1])
+        else:
+            cand = TileConfig(bn_stack=combo[0])
+        eff = effective(kernel, shape, cand)
+        if eff not in seen:
+            seen.add(eff)
+            out.append(eff)
+    return out
+
+
+# -------------------------------------------------------------- cache state
+
+
+@functools.lru_cache(maxsize=None)
+def platform() -> str:
+    """Cache key component; probed once per process like registry.on_tpu."""
+    return jax.default_backend()
+
+
+def _interpret() -> bool:
+    return platform() != "tpu"
+
+
+def key_for(kernel: str, shape: tuple, dtype) -> str:
+    dims = "x".join(str(int(s)) for s in shape)
+    return f"{platform()}|{kernel}|{dims}|{jnp.dtype(dtype).name}"
+
+
+def parse_key(key: str) -> tuple:
+    """``plat|kernel|NxDx...|dtype`` -> (platform, kernel, shape, dtype)."""
+    parts = key.split("|")
+    if len(parts) != 4:
+        raise ValueError(f"malformed tune-cache key {key!r}")
+    plat, kernel, dims, dtype = parts
+    shape = tuple(int(s) for s in dims.split("x"))
+    return plat, kernel, shape, dtype
+
+
+_STATE: dict = {"path": None, "mode": None, "entries": None, "epoch": 0}
+
+
+def _load_entries(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    problems = validate_cache(data)
+    if problems:
+        raise ValueError(f"invalid tune cache {path}: {problems[0]}"
+                         + (f" (+{len(problems) - 1} more)"
+                            if len(problems) > 1 else ""))
+    return {k: TileConfig(bn_stack=v["bn_stack"], bk=v["bk"], bd=v["bd"],
+                          bn=v["bn"])
+            for k, v in data.get("entries", {}).items()}
+
+
+def _resolve() -> dict:
+    """Resolve the cache path/mode from the environment once per process
+    (until an explicit ``reload``)."""
+    if _STATE["entries"] is None:
+        path = os.environ.get(ENV_CACHE) or DEFAULT_CACHE_PATH
+        mode = os.environ.get(ENV_MODE) or "auto"
+        if mode not in TUNE_MODES:
+            raise ValueError(f"{ENV_MODE}={mode!r}; expected one of "
+                             f"{TUNE_MODES}")
+        _STATE.update(path=path, mode=mode, entries=_load_entries(path))
+    return _STATE
+
+
+def reload(path: Optional[str] = None, mode: Optional[str] = None) -> None:
+    """Re-read the cache (optionally from a new path / with a new mode) and
+    bump the resolution epoch — the registry re-interns its KernelSets
+    against the new snapshot on the next ``get_kernels`` call."""
+    cur = _resolve()
+    path = path if path is not None else cur["path"]
+    mode = mode if mode is not None else cur["mode"]
+    if mode not in TUNE_MODES:
+        raise ValueError(f"tune mode {mode!r}; expected one of {TUNE_MODES}")
+    _STATE.update(path=path, mode=mode, entries=_load_entries(path),
+                  epoch=cur["epoch"] + 1)
+
+
+def cache_path() -> str:
+    return _resolve()["path"]
+
+
+def mode() -> str:
+    return _resolve()["mode"]
+
+
+def snapshot() -> tuple:
+    """Hashable frozen view of the resolved entries (sorted key/config
+    pairs) — the interning key for ``registry.get_kernels`` and the
+    ``KernelSet.tuned`` field, so two processes resolving the same cache
+    file produce equal KernelSets."""
+    st = _resolve()
+    return (st["mode"],) + tuple(sorted(st["entries"].items()))
+
+
+def get_config(kernel: str, shape: tuple, dtype) -> TileConfig:
+    """The TileConfig a kernel should run with for one operand shape.
+
+    Called by the registry's pallas entry points at trace time; never
+    measures except in ``"force"`` mode on a cache miss.
+    """
+    st = _resolve()
+    default = effective(kernel, shape, DEFAULT_CONFIG)
+    if st["mode"] == "off":
+        return default
+    hit = st["entries"].get(key_for(kernel, shape, dtype))
+    if hit is not None:
+        return effective(kernel, shape, hit)
+    if st["mode"] != "force":
+        return default
+    best, _ = tune(kernel, shape, dtype)
+    st["entries"][key_for(kernel, shape, dtype)] = best
+    try:
+        save(st["path"])
+    except OSError:
+        pass  # read-only cache location: keep the in-process entry only
+    return best
+
+
+# ------------------------------------------------------------ measured search
+
+
+def _operands(kernel: str, shape: tuple, dtype) -> tuple:
+    """Deterministic synthetic operands of exactly the tuned shape."""
+    rng = np.random.default_rng(abs(hash((kernel,) + tuple(shape))) % (2**32))
+    dt = jnp.dtype(dtype)
+
+    def mk(s, d=dt):
+        x = rng.standard_normal(size=s)
+        if jnp.dtype(d) == jnp.int8:
+            return jnp.asarray(np.clip(np.round(x * 40), -127, 127), jnp.int8)
+        return jnp.asarray(x, d)
+
+    if kernel == "batched_gram":
+        return (mk(shape),)
+    if kernel == "batched_gram_mixed":
+        N, d, k, r = shape
+        return (mk((N, d, k), jnp.int8),
+                jnp.abs(mk((N, k), jnp.float32)) + 0.1,
+                mk((N, d, r), jnp.float32))
+    if kernel == "batched_lowrank_apply":
+        N, d, ell, n = shape
+        return (mk((N, d, ell)), mk((N, ell), jnp.float32),
+                jnp.abs(mk((N,), jnp.float32)), mk((N, d, n), jnp.float32))
+    if kernel == "batched_project_quantize":
+        N, d, k, r, e = shape
+        return (mk((N, d, k), jnp.int8), mk((N, k, e), jnp.float32),
+                mk((N, d, r), jnp.float32), mk((N, r, e), jnp.float32))
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _runner(kernel: str):
+    """``fn(config, *operands)`` invoking the pallas kernel with the
+    candidate's static tile args.  Kernel modules import lazily (the
+    registry imports this module at its own import time)."""
+    from repro.kernels.gram import kernel as gram_kernel
+    from repro.kernels.lowrank import kernel as lowrank_kernel
+    interp = _interpret()
+    if kernel == "batched_gram":
+        return lambda c, a: gram_kernel.batched_gram_pallas(
+            a, bk=c.bk, bd=c.bd, bn_stack=c.bn_stack, interpret=interp)
+    if kernel == "batched_gram_mixed":
+        return lambda c, vq, colw, a: gram_kernel.batched_gram_mixed_pallas(
+            vq, colw, a, bd=c.bd, bn_stack=c.bn_stack, interpret=interp)
+    if kernel == "batched_lowrank_apply":
+        return lambda c, u, co, b, g: \
+            lowrank_kernel.batched_lowrank_apply_pallas(
+                u, co, b, g, bn=c.bn, bn_stack=c.bn_stack, interpret=interp)
+    if kernel == "batched_project_quantize":
+        return lambda c, vq, wt, a, wb: \
+            lowrank_kernel.batched_project_quantize_pallas(
+                vq, wt, a, wb, bn_stack=c.bn_stack, interpret=interp)
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def tune(kernel: str, shape: tuple, dtype, *, repeats: int = 3
+         ) -> tuple[TileConfig, dict]:
+    """Measured search: time every candidate, return (winner, table).
+
+    The table maps TileConfig -> best-of-``repeats`` seconds; candidates
+    that fail to compile/execute are recorded as ``inf`` and never win.
+    The default config is measured first and wins ties, so a tuned run is
+    never slower than untuned modulo timer noise.
+    """
+    ops = _operands(kernel, shape, dtype)
+    fn = _runner(kernel)
+    table: dict = {}
+    for cand in candidates(kernel, shape):
+        try:
+            jax.block_until_ready(fn(cand, *ops))  # compile + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(cand, *ops))
+                best = min(best, time.perf_counter() - t0)
+            table[cand] = best
+        except Exception:
+            table[cand] = float("inf")
+    winner = min(table, key=lambda c: (table[c], candidates(
+        kernel, shape).index(c)))
+    if table[winner] == float("inf"):
+        raise RuntimeError(
+            f"every candidate failed for {kernel} {shape} {dtype}")
+    return winner, table
+
+
+def tune_into_cache(specs, *, path: Optional[str] = None) -> dict:
+    """Force-tune a list of ``(kernel, shape, dtype)`` specs into the
+    in-process cache (and ``path`` if given), returning {key: TileConfig}.
+    Benchmarks use this to flip the engine onto tuned configs without
+    touching the committed fixture."""
+    st = _resolve()
+    out = {}
+    for kernel, shape, dtype in specs:
+        key = key_for(kernel, shape, dtype)
+        if key not in st["entries"]:
+            st["entries"][key], _ = tune(kernel, shape, dtype)
+        out[key] = st["entries"][key]
+    st["epoch"] += 1  # re-intern KernelSets against the new snapshot
+    if path is not None:
+        save(path)
+    return out
+
+
+# ------------------------------------------------------- persistence / schema
+
+
+def save(path: Optional[str] = None) -> str:
+    st = _resolve()
+    path = path or st["path"]
+    data = {"version": CACHE_VERSION,
+            "entries": {k: dict(v._asdict(), us=None)
+                        for k, v in sorted(st["entries"].items())}}
+    # drop the informational 'us' slot (kept for hand-edited caches)
+    for v in data["entries"].values():
+        v.pop("us")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def validate_cache(data: Any) -> list:
+    """Schema check for a loaded cache dict: every entry's key parses, the
+    kernel is known, and the config lies inside the candidate space for its
+    key's shape (the committed fixture is CI-gated on this)."""
+    problems = []
+    if not isinstance(data, dict):
+        return [f"cache root must be an object, got {type(data).__name__}"]
+    if data.get("version") != CACHE_VERSION:
+        problems.append(f"version {data.get('version')!r} != {CACHE_VERSION}")
+    entries = data.get("entries", {})
+    if not isinstance(entries, dict):
+        return problems + ["'entries' must be an object"]
+    for key, v in entries.items():
+        try:
+            _, kernel, shape, dtype = parse_key(key)
+        except ValueError as e:
+            problems.append(str(e))
+            continue
+        if kernel not in KERNELS:
+            problems.append(f"{key}: unknown kernel {kernel!r}")
+            continue
+        try:
+            jnp.dtype(dtype)
+        except TypeError:
+            problems.append(f"{key}: unknown dtype {dtype!r}")
+            continue
+        if not isinstance(v, dict) or \
+                set(v) - {"bn_stack", "bk", "bd", "bn", "us"}:
+            problems.append(f"{key}: unexpected config fields {sorted(v)}")
+            continue
+        try:
+            cfg = TileConfig(bn_stack=int(v["bn_stack"]), bk=int(v["bk"]),
+                             bd=int(v["bd"]), bn=int(v["bn"]))
+        except (KeyError, TypeError, ValueError):
+            problems.append(f"{key}: config fields must be 4 ints")
+            continue
+        if cfg not in candidates(kernel, shape):
+            problems.append(
+                f"{key}: config {tuple(cfg)} outside the candidate space "
+                f"for shape {shape}")
+    return problems
+
+
+# ------------------------------------------------------------------------ CLI
+
+
+def _main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.kernels.autotune",
+        description="Tune-cache maintenance for the batched Pallas kernels.")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    v = sub.add_parser("validate", help="schema-check a cache file")
+    v.add_argument("--cache", default=DEFAULT_CACHE_PATH)
+    t = sub.add_parser("tune", help="measure one (kernel, shape, dtype) and "
+                                    "write the winner into a cache file")
+    t.add_argument("--kernel", required=True, choices=KERNELS)
+    t.add_argument("--shape", required=True,
+                   help="operand dims, e.g. 32x32x40")
+    t.add_argument("--dtype", default="float32")
+    t.add_argument("--cache", default=DEFAULT_CACHE_PATH)
+    s = sub.add_parser("show", help="print the resolved entries")
+    s.add_argument("--cache", default=None)
+    args = p.parse_args(argv)
+
+    if args.cmd == "validate":
+        if not os.path.exists(args.cache):
+            print(f"FAIL: no cache at {args.cache}")
+            return 1
+        with open(args.cache) as f:
+            data = json.load(f)
+        problems = validate_cache(data)
+        for pr in problems:
+            print(f"FAIL: {pr}")
+        if not problems:
+            print(f"tune cache OK: {len(data.get('entries', {}))} entries "
+                  f"validated against the candidate-space schema")
+        return 1 if problems else 0
+
+    if args.cmd == "tune":
+        shape = tuple(int(x) for x in args.shape.split("x"))
+        reload(path=args.cache, mode="force")
+        best, table = tune(args.kernel, shape, args.dtype)
+        key = key_for(args.kernel, shape, args.dtype)
+        _resolve()["entries"][key] = best
+        save(args.cache)
+        ranked = sorted(table.items(), key=lambda kv: kv[1])
+        for cfg, t_s in ranked[:5]:
+            mark = " <-- saved" if cfg == best else ""
+            print(f"{tuple(cfg)}: {t_s * 1e6:.1f}us{mark}")
+        print(f"wrote {key} to {args.cache}")
+        return 0
+
+    if args.cache:
+        reload(path=args.cache)
+    for k, cfg in sorted(_resolve()["entries"].items()):
+        print(f"{k}: {tuple(cfg)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -106,6 +106,10 @@ def batched_gram_pallas(a: jnp.ndarray, *, bk: int = 128, bd: int = 256,
     single-block kernel.  Ragged N/d/k are zero-padded and sliced off.
     """
     N, d, k = a.shape
+    if N == 0:
+        # empty pool group: a 0-sized grid dim is undefined behaviour in
+        # some lowerings, and the result is shape-determined anyway
+        return jnp.zeros((0, k, k), jnp.float32)
     bk = min(bk, max(k, 1))
     bd = min(bd, max(d, 1))
     bn_stack = min(bn_stack, max(N, 1))
@@ -130,3 +134,72 @@ def batched_gram_pallas(a: jnp.ndarray, *, bk: int = 128, bd: int = 256,
         interpret=interpret,
     )(a, a)
     return out[:N, :k, :k]
+
+
+def _batched_gram_mixed_kernel(vq_ref, a_ref, out_ref):
+    di = pl.program_id(1)
+
+    @pl.when(di == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # the int8 eigenvector stack dequantizes in-registers: the astype IS the
+    # dequantize (per-block scale + per-column ladder weights are folded in
+    # outside the kernel, on the small (N, k+r, k+r) output)
+    b = vq_ref[...].astype(jnp.float32)       # (bn_stack, bd, k)
+    a = a_ref[...].astype(jnp.float32)        # (bn_stack, bd, r)
+    m = jnp.concatenate([b, a], axis=2)       # in-register, never HBM
+    out_ref[...] += jax.lax.dot_general(
+        m, m, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bn_stack", "interpret"))
+def batched_gram_mixed_pallas(vq: jnp.ndarray, colw: jnp.ndarray,
+                              a: jnp.ndarray, *, bd: int = 256,
+                              bn_stack: int = 1,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Gram of the mixed FD stack ``M = [dequant(vq) * colw, A]`` without
+    ever materializing the dequantized ``(N, d, k)`` f32 eigenvector stack.
+
+    vq: (N, d, k) int8 quantized eigenvectors, colw: (N, k) f32 per-column
+    weights (per-block quantization scale x sqrt(beta2 * s) folded
+    together), a: (N, d, r) f32 new factors.  Returns (N, k+r, k+r) f32.
+
+    The kernel accumulates ``C0 = [V, A]^T [V, A]`` with the int8 upcast
+    happening in-registers (grid = (N/bn_stack, d/bd); the whole (k+r)^2
+    output tile stays VMEM-resident per block — fine for the pool shapes
+    the engine produces, where k+r <= block_size + rank).  The exact column
+    weighting ``C = D C0 D`` with ``D = diag([colw, 1])`` is applied
+    outside on the small output: elementwise f32, no d-sized traffic.
+    """
+    N, d, k = vq.shape
+    Na, da, r = a.shape
+    assert (N, d) == (Na, da), (vq.shape, a.shape)
+    K = k + r
+    if N == 0:
+        return jnp.zeros((0, K, K), jnp.float32)
+    bd = min(bd, max(d, 1))
+    bn_stack = min(bn_stack, max(N, 1))
+    pN = (-N) % bn_stack
+    pd = (-d) % bd
+    if pN or pd:
+        vq = jnp.pad(vq, ((0, pN), (0, pd), (0, 0)))
+        a = jnp.pad(a, ((0, pN), (0, pd), (0, 0)))
+    Np, dp, _ = vq.shape
+
+    out = pl.pallas_call(
+        _batched_gram_mixed_kernel,
+        grid=(Np // bn_stack, dp // bd),
+        in_specs=[
+            pl.BlockSpec((bn_stack, bd, k), lambda n, di: (n, di, 0)),
+            pl.BlockSpec((bn_stack, bd, r), lambda n, di: (n, di, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn_stack, K, K), lambda n, di: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, K, K), jnp.float32),
+        interpret=interpret,
+    )(vq, a)
+    out = out[:N]
+    w = jnp.concatenate(
+        [colw.astype(jnp.float32), jnp.ones((N, r), jnp.float32)], axis=1)
+    return out * w[:, :, None] * w[:, None, :]

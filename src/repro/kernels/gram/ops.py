@@ -8,9 +8,11 @@ refs) lives in ``repro.kernels.registry.get_kernels``.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
-from repro.kernels import registry
+from repro.kernels import autotune, registry
 
 
 def gram(a: jnp.ndarray) -> jnp.ndarray:
@@ -18,6 +20,21 @@ def gram(a: jnp.ndarray) -> jnp.ndarray:
     return registry.get_kernels("pallas").gram(a)
 
 
-def batched_gram(a: jnp.ndarray) -> jnp.ndarray:
-    """C[n] = A[n]^T A[n] over a (N, d, k) pool stack, grid-over-N."""
-    return registry.get_kernels("pallas").batched_gram(a)
+def batched_gram(a: jnp.ndarray, *,
+                 config: Optional[autotune.TileConfig] = None) -> jnp.ndarray:
+    """C[n] = A[n]^T A[n] over a (N, d, k) pool stack, grid-over-N.
+
+    ``config`` pins an explicit TileConfig; omitted, the registry resolves
+    one per shape from the tune cache (default tiles on a miss) — no call
+    site hardcodes ``bn_stack`` anymore.
+    """
+    return registry.get_kernels("pallas").batched_gram(a, config=config)
+
+
+def batched_gram_mixed(vq: jnp.ndarray, colw: jnp.ndarray, a: jnp.ndarray, *,
+                       config: Optional[autotune.TileConfig] = None
+                       ) -> jnp.ndarray:
+    """Gram of ``[dequant(vq) * colw, A]`` with the int8 stack upcast
+    in-registers; see kernels/gram/kernel.py."""
+    return registry.get_kernels("pallas").batched_gram_mixed(
+        vq, colw, a, config=config)

@@ -17,3 +17,22 @@ def batched_gram_ref(a: jnp.ndarray) -> jnp.ndarray:
     """C[n] = A[n]^T A[n] for a (N, d, k) stack; f32 accumulation."""
     a32 = a.astype(jnp.float32)
     return jax.lax.dot_general(a32, a32, (((1,), (1,)), ((0,), (0,))))
+
+
+def batched_gram_mixed_ref(vq: jnp.ndarray, colw: jnp.ndarray,
+                           a: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused mixed Gram: vq (N, d, k) int8 eigenvectors,
+    colw (N, k) f32 per-column weights (block scale x sqrt(beta2*s)),
+    a (N, d, r) f32 new factors -> (N, k+r, k+r) f32 Gram of [vq*colw, a].
+
+    Mirrors the kernel's math exactly: the unweighted Gram of [V, A] first,
+    column weights applied on the small output (not on the d-sized stack).
+    """
+    N, _, k = vq.shape
+    r = a.shape[-1]
+    m = jnp.concatenate([vq.astype(jnp.float32), a.astype(jnp.float32)],
+                        axis=2)
+    c0 = jax.lax.dot_general(m, m, (((1,), (1,)), ((0,), (0,))))
+    w = jnp.concatenate(
+        [colw.astype(jnp.float32), jnp.ones((N, r), jnp.float32)], axis=1)
+    return c0 * w[:, :, None] * w[:, None, :]

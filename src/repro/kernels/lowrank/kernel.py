@@ -106,6 +106,10 @@ def batched_lowrank_apply_pallas(u: jnp.ndarray, coeffs: jnp.ndarray,
     N, d, ell = u.shape
     Ng, dg, n = g.shape
     assert (N, d) == (Ng, dg), (u.shape, g.shape)
+    if N == 0:
+        # empty pool group: nothing to apply (0-sized grid dims are
+        # undefined behaviour in some lowerings)
+        return jnp.zeros((0, d, n), g.dtype)
     bn = min(bn, max(n, 1))
     bn_stack = min(bn_stack, max(N, 1))
     pN = (-N) % bn_stack
@@ -133,3 +137,91 @@ def batched_lowrank_apply_pallas(u: jnp.ndarray, coeffs: jnp.ndarray,
         interpret=interpret,
     )(u, coeffs2d, base2d, g)
     return out[:N, :, :n]
+
+
+# int8 range of the quantized-pool storage format; must mirror
+# core/quantize.py (_INT8_MAX) so the fused requantize epilogue below is
+# interchangeable with quantize.quantize_stack's round-to-nearest path.
+_INT8_MAX = 127.0
+
+
+def _batched_project_quantize_kernel(vq_ref, wtop_ref, a_ref, wbot_ref,
+                                     values_ref, scale_ref):
+    # U_new = dequant(Vq) @ W_top + A @ W_bot, with the per-block dequant
+    # scale and the eigenvalue-ladder column weights pre-folded into W_top
+    # (both are per-column of the SMALL factor, so folding is exact); the
+    # int8 upcast happens in-registers, and the freshly projected factor is
+    # re-quantized before it ever leaves the kernel — the f32 (d, ell)
+    # stack exists only in VMEM scratch, never in HBM.
+    v = vq_ref[...].astype(jnp.float32)       # (bn_stack, d, k)
+    un = jax.lax.dot_general(v, wtop_ref[...],
+                             (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    un += jax.lax.dot_general(a_ref[...].astype(jnp.float32), wbot_ref[...],
+                              (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    absmax = jnp.max(jnp.abs(un), axis=(1, 2), keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / _INT8_MAX, 1.0)
+    scale_ref[...] = scale
+    values_ref[...] = jnp.clip(jnp.round(un / scale),
+                               -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bn_stack", "interpret"))
+def batched_project_quantize_pallas(vq: jnp.ndarray, w_top: jnp.ndarray,
+                                    a: jnp.ndarray, w_bot: jnp.ndarray, *,
+                                    bn_stack: int = 1,
+                                    interpret: bool = True
+                                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused FD write-back epilogue for int8 pool storage.
+
+    Computes ``U_new = dequant(vq) @ w_top + a @ w_bot`` per pool block and
+    re-quantizes it in the same kernel: returns ``(values int8 (N, d, e),
+    scale f32 (N, 1, 1))`` matching the ``QuantizedPool`` storage layout.
+
+    vq: (N, d, k) int8, w_top: (N, k, e) f32 (quantization scale + ladder
+    weights folded in by the caller), a: (N, d, r) f32, w_bot: (N, r, e)
+    f32.  One grid step owns ``bn_stack`` whole blocks (the per-block
+    absmax needs the full (d, e) factor resident — d x e stays comfortably
+    in VMEM for the engine's block sizes; round-to-nearest is used because
+    the eigenvector factor is fully recomputed each refresh, not EMA-
+    accumulated, so stochastic rounding buys nothing here).
+    """
+    N, d, k = vq.shape
+    e = w_top.shape[-1]
+    r = a.shape[-1]
+    assert w_top.shape == (N, k, e), (vq.shape, w_top.shape)
+    assert a.shape[:2] == (N, d) and w_bot.shape == (N, r, e), \
+        (a.shape, w_bot.shape)
+    if N == 0:
+        return (jnp.zeros((0, d, e), jnp.int8),
+                jnp.ones((0, 1, 1), jnp.float32))
+    bn_stack = min(bn_stack, max(N, 1))
+    pN = (-N) % bn_stack
+    if pN:
+        vq = jnp.pad(vq, ((0, pN), (0, 0), (0, 0)))
+        w_top = jnp.pad(w_top, ((0, pN), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, pN), (0, 0), (0, 0)))
+        w_bot = jnp.pad(w_bot, ((0, pN), (0, 0), (0, 0)))
+    Np = vq.shape[0]
+
+    values, scale = pl.pallas_call(
+        _batched_project_quantize_kernel,
+        grid=(Np // bn_stack,),
+        in_specs=[
+            pl.BlockSpec((bn_stack, d, k), lambda nb: (nb, 0, 0)),
+            pl.BlockSpec((bn_stack, k, e), lambda nb: (nb, 0, 0)),
+            pl.BlockSpec((bn_stack, d, r), lambda nb: (nb, 0, 0)),
+            pl.BlockSpec((bn_stack, r, e), lambda nb: (nb, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn_stack, d, e), lambda nb: (nb, 0, 0)),
+            pl.BlockSpec((bn_stack, 1, 1), lambda nb: (nb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, d, e), jnp.int8),
+            jax.ShapeDtypeStruct((Np, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vq, w_top, a, w_bot)
+    return values[:N], scale[:N]

@@ -7,9 +7,11 @@ selection (pallas vs the jnp refs) lives in
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
-from repro.kernels import registry
+from repro.kernels import autotune, registry
 
 
 def lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
@@ -18,7 +20,34 @@ def lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
 
 
 def batched_lowrank_apply(u: jnp.ndarray, coeffs: jnp.ndarray, base,
-                          g: jnp.ndarray) -> jnp.ndarray:
-    """Pool-stack apply (leading N on every operand), grid-over-N."""
+                          g: jnp.ndarray, *,
+                          config: Optional[autotune.TileConfig] = None
+                          ) -> jnp.ndarray:
+    """Pool-stack apply (leading N on every operand), grid-over-N.
+
+    ``config`` pins an explicit TileConfig; omitted, the registry resolves
+    one per shape from the tune cache (default tiles on a miss) — no call
+    site hardcodes ``bn_stack`` anymore.
+    """
     return registry.get_kernels("pallas").batched_lowrank_apply(
-        u, coeffs, base, g)
+        u, coeffs, base, g, config=config)
+
+
+def batched_lowrank_apply_quantized(values: jnp.ndarray, scale: jnp.ndarray,
+                                    coeffs: jnp.ndarray, base,
+                                    g: jnp.ndarray, *,
+                                    config: Optional[autotune.TileConfig]
+                                    = None) -> jnp.ndarray:
+    """Quantized-storage apply: int8 values + per-block scale consumed
+    directly (scale^2 folded into coeffs); see kernels/registry.py."""
+    return registry.get_kernels("pallas").batched_lowrank_apply_quantized(
+        values, scale, coeffs, base, g, config=config)
+
+
+def batched_project_quantize(vq: jnp.ndarray, w_top: jnp.ndarray,
+                             a: jnp.ndarray, w_bot: jnp.ndarray, *,
+                             config: Optional[autotune.TileConfig] = None):
+    """Fused FD write-back epilogue -> (values int8, scale f32); see
+    kernels/lowrank/kernel.py."""
+    return registry.get_kernels("pallas").batched_project_quantize(
+        vq, w_top, a, w_bot, config=config)

@@ -24,3 +24,32 @@ def batched_lowrank_apply_ref(u: jnp.ndarray, coeffs: jnp.ndarray, base,
     scaled = coeffs[:, :, None] * proj
     expand = jax.lax.dot_general(u, scaled, (((2,), (1,)), ((0,), (0,))))
     return base[:, None, None] * g + expand
+
+
+def batched_lowrank_apply_quantized_ref(values: jnp.ndarray,
+                                        scale: jnp.ndarray,
+                                        coeffs: jnp.ndarray, base,
+                                        g: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the quantized-eigenvector apply: the per-block scale of
+    the int8 factor commutes out of ``U diag(c) U^T`` as ``scale^2``, so
+    the apply runs on the raw int8 values (upcast only) with the scale
+    folded into the coefficients — the same algebra the pallas path uses.
+
+    values (N, d, ell) int8, scale (N, 1, 1) f32, coeffs (N, ell),
+    base (N,), g (N, d, n)."""
+    s2 = jnp.square(scale.reshape(scale.shape[0], 1).astype(jnp.float32))
+    return batched_lowrank_apply_ref(values.astype(jnp.float32),
+                                     coeffs * s2, base, g)
+
+
+def batched_project_quantize_ref(vq: jnp.ndarray, w_top: jnp.ndarray,
+                                 a: jnp.ndarray, w_bot: jnp.ndarray
+                                 ) -> tuple:
+    """Oracle for the fused FD write-back epilogue: project the new factor
+    and re-quantize per block (round-to-nearest, same rule as
+    core/quantize.quantize_stack with no key)."""
+    from repro.core import quantize
+    un = jnp.matmul(vq.astype(jnp.float32), w_top) \
+        + jnp.matmul(a.astype(jnp.float32), w_bot)
+    qp = quantize.quantize_stack(un)
+    return qp.values, qp.scale

@@ -3,9 +3,9 @@
 One resolution point replaces the per-call ``_on_tpu()`` checks that used to
 live in every ``kernels/*/ops.py``: the platform is probed exactly once
 (module-level LRU cache), the resulting ``KernelSet`` is interned per
-resolved backend, and everything downstream — the pooled engine
-(core/api.py), Sketchy, Shampoo, the benchmarks — receives the same frozen
-set of callables.
+(resolved backend, tune-cache snapshot), and everything downstream — the
+pooled engine (core/api.py), Sketchy, Shampoo, the benchmarks — receives
+the same frozen set of callables.
 
 Backends
   ``"pallas"``  Pallas kernels (kernels/gram, kernels/lowrank).  Compiled to
@@ -24,15 +24,26 @@ Backends
 
 ``KernelSet`` carries both the single-block entry points (direct FD calls,
 OCO learners, the per-leaf fallback engine) and the batched grid-over-N
-entry points the pooled ``(N, bs_m, bs_n)`` stacks dispatch to.
+entry points the pooled ``(N, bs_m, bs_n)`` stacks dispatch to.  Every
+batched entry accepts an optional ``config=`` TileConfig; when omitted, the
+pallas entries resolve one per operand shape through
+``kernels/autotune.get_config`` at *trace* time (a tuned run bakes in
+different static tile args at zero per-step cost), and the xla entries
+ignore it (jnp expressions have no tiles).  The resolved tune-cache
+snapshot is part of the interning key, so reloading a cache
+(``autotune.reload`` / ``tune_into_cache``) yields a fresh KernelSet while
+identical cache state keeps returning the identical object.
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
 
 BACKENDS = ("auto", "xla", "pallas")
 ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -45,12 +56,34 @@ class KernelSet(NamedTuple):
     batched_gram(a):              (N, d, k) -> (N, k, k)  one gram per block
     lowrank_apply(u, c, b, g):    (d, ell), (ell,), (), (d, n) -> (d, n)
     batched_lowrank_apply(...):   leading N on every operand
+
+    Fused quantized entries (int8 pool storage; see core/quantize.py):
+
+    batched_gram_mixed(vq, colw, a):
+        (N, d, k) int8, (N, k) f32, (N, d, r) f32 -> (N, k+r, k+r) f32 —
+        the FD refresh Gram with the int8 eigenvector stack dequantized
+        in-registers (never materialized as f32 in HBM).
+    batched_lowrank_apply_quantized(values, scale, coeffs, base, g):
+        the low-rank apply consuming the QuantizedPool storage directly —
+        the per-block scale commutes out of ``U diag(c) U^T`` as
+        ``scale^2`` and is folded into ``coeffs``.
+    batched_project_quantize(vq, w_top, a, w_bot):
+        fused FD write-back: project the refreshed eigenvectors and
+        re-quantize them in one kernel -> (values int8, scale f32).
+
+    ``tuned`` is the autotune snapshot this set was interned against —
+    ``()``-like sentinel of the cache content, useful for determinism
+    checks (same cache file => equal ``tuned``).
     """
     backend: str
     gram: Callable
     batched_gram: Callable
     lowrank_apply: Callable
     batched_lowrank_apply: Callable
+    batched_gram_mixed: Callable
+    batched_lowrank_apply_quantized: Callable
+    batched_project_quantize: Callable
+    tuned: tuple
 
 
 @functools.lru_cache(maxsize=None)
@@ -88,15 +121,31 @@ def resolve_backend(backend: str = "auto") -> str:
 def get_kernels(backend: str = "auto") -> KernelSet:
     """Resolve ``backend`` and return the interned KernelSet for it.
 
-    Identical requests return the identical object (``lru_cache`` on the
-    resolved name), so frozen-dataclass preconditioners holding a KernelSet
-    stay hashable/equal across transform rebuilds.
+    Identical requests against identical tune-cache state return the
+    identical object (``lru_cache`` on the resolved name + autotune
+    snapshot), so frozen-dataclass preconditioners holding a KernelSet
+    stay hashable/equal across transform rebuilds — and a cache reload
+    (new snapshot) produces a *new* set whose entries re-resolve configs.
     """
-    return _kernel_set(resolve_backend(backend))
+    return _kernel_set(resolve_backend(backend), autotune.snapshot())
+
+
+def _fold_quantized_apply(batched_apply: Callable) -> Callable:
+    """Quantized-storage apply from the plain batched apply: the per-block
+    scale of the int8 factor commutes out of ``U diag(c) U^T`` as
+    ``scale^2``, so the existing kernel consumes the raw int8 values (its
+    in-kernel upcast IS the dequantize) with the scale folded into the
+    coefficients — no f32 factor stack is ever materialized."""
+    def apply_quantized(values, scale, coeffs, base, g,
+                        config: Optional[Any] = None):
+        s2 = jnp.square(
+            scale.reshape(scale.shape[0], 1).astype(jnp.float32))
+        return batched_apply(values, coeffs * s2, base, g, config=config)
+    return apply_quantized
 
 
 @functools.lru_cache(maxsize=None)
-def _kernel_set(resolved: str) -> KernelSet:
+def _kernel_set(resolved: str, tuned: tuple) -> KernelSet:
     # imports deferred so merely importing the registry (e.g. for
     # resolve_backend validation in EngineConfig) stays cheap
     from repro.kernels.gram import kernel as gram_kernel
@@ -106,24 +155,84 @@ def _kernel_set(resolved: str) -> KernelSet:
 
     if resolved == "pallas":
         interp = interpret_mode()
+
+        def batched_gram(a, config: Optional[Any] = None):
+            c = config if config is not None else autotune.get_config(
+                "batched_gram", tuple(a.shape), a.dtype)
+            return gram_kernel.batched_gram_pallas(
+                a, bk=c.bk, bd=c.bd, bn_stack=c.bn_stack, interpret=interp)
+
+        def batched_gram_mixed(vq, colw, a, config: Optional[Any] = None):
+            N, d, k = vq.shape
+            c = config if config is not None else autotune.get_config(
+                "batched_gram_mixed", (N, d, k, a.shape[-1]), vq.dtype)
+            return gram_kernel.batched_gram_mixed_pallas(
+                vq, colw, a, bd=c.bd, bn_stack=c.bn_stack, interpret=interp)
+
+        def batched_lowrank_apply(u, coeffs, base, g,
+                                  config: Optional[Any] = None):
+            N, d, ell = u.shape
+            c = config if config is not None else autotune.get_config(
+                "batched_lowrank_apply", (N, d, ell, g.shape[-1]), u.dtype)
+            return lowrank_kernel.batched_lowrank_apply_pallas(
+                u, coeffs, base, g, bn=c.bn, bn_stack=c.bn_stack,
+                interpret=interp)
+
+        def batched_project_quantize(vq, w_top, a, w_bot,
+                                     config: Optional[Any] = None):
+            N, d, k = vq.shape
+            c = config if config is not None else autotune.get_config(
+                "batched_project_quantize",
+                (N, d, k, a.shape[-1], w_top.shape[-1]), vq.dtype)
+            return lowrank_kernel.batched_project_quantize_pallas(
+                vq, w_top, a, w_bot, bn_stack=c.bn_stack, interpret=interp)
+
         return KernelSet(
             backend="pallas",
             gram=functools.partial(gram_kernel.gram_pallas,
                                    interpret=interp),
-            batched_gram=functools.partial(gram_kernel.batched_gram_pallas,
-                                           interpret=interp),
+            batched_gram=batched_gram,
             lowrank_apply=functools.partial(
                 lowrank_kernel.lowrank_apply_pallas, interpret=interp),
-            batched_lowrank_apply=functools.partial(
-                lowrank_kernel.batched_lowrank_apply_pallas,
-                interpret=interp),
+            batched_lowrank_apply=batched_lowrank_apply,
+            batched_gram_mixed=batched_gram_mixed,
+            batched_lowrank_apply_quantized=_fold_quantized_apply(
+                batched_lowrank_apply),
+            batched_project_quantize=batched_project_quantize,
+            tuned=tuned,
         )
     if resolved != "xla":
         raise ValueError(f"unresolved backend {resolved!r}")
+
+    # jnp expressions have no tile parameters: accept and ignore ``config``
+    # so call sites stay backend-agnostic
+    def xla_batched_gram(a, config: Optional[Any] = None):
+        return gram_ref.batched_gram_ref(a)
+
+    def xla_batched_gram_mixed(vq, colw, a, config: Optional[Any] = None):
+        return gram_ref.batched_gram_mixed_ref(vq, colw, a)
+
+    def xla_batched_lowrank_apply(u, coeffs, base, g,
+                                  config: Optional[Any] = None):
+        return lowrank_ref.batched_lowrank_apply_ref(u, coeffs, base, g)
+
+    def xla_batched_lowrank_apply_quantized(values, scale, coeffs, base, g,
+                                            config: Optional[Any] = None):
+        return lowrank_ref.batched_lowrank_apply_quantized_ref(
+            values, scale, coeffs, base, g)
+
+    def xla_batched_project_quantize(vq, w_top, a, w_bot,
+                                     config: Optional[Any] = None):
+        return lowrank_ref.batched_project_quantize_ref(vq, w_top, a, w_bot)
+
     return KernelSet(
         backend="xla",
         gram=gram_ref.gram_ref,
-        batched_gram=gram_ref.batched_gram_ref,
+        batched_gram=xla_batched_gram,
         lowrank_apply=lowrank_ref.lowrank_apply_ref,
-        batched_lowrank_apply=lowrank_ref.batched_lowrank_apply_ref,
+        batched_lowrank_apply=xla_batched_lowrank_apply,
+        batched_gram_mixed=xla_batched_gram_mixed,
+        batched_lowrank_apply_quantized=xla_batched_lowrank_apply_quantized,
+        batched_project_quantize=xla_batched_project_quantize,
+        tuned=tuned,
     )

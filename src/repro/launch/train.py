@@ -37,6 +37,14 @@ def main() -> None:
                         "between steps (core/quantize.py): fp32 = bitwise "
                         "parity, bf16 = 2x smaller, int8 = per-block "
                         "quantized matrix factors (~4x); compute stays f32")
+    p.add_argument("--quantized-epilogue", default="auto",
+                   choices=["auto", "off", "on"],
+                   help="fused int8 compute (core/api.py): with "
+                        "--second-moment-dtype int8, auto fuses dequantize/"
+                        "requantize into the pallas kernels (no f32 factor "
+                        "stack at the pool boundary); off = always "
+                        "dequantize at the boundary; on = force the fused "
+                        "math on any backend (sketchy only)")
     p.add_argument("--refresh-schedule", default="synchronized",
                    choices=["synchronized", "staggered"],
                    help="refresh phasing over the pooled block stacks: "
@@ -92,6 +100,7 @@ def main() -> None:
         refresh_mode=args.refresh_mode,
         profile_annotations=args.profile_annotations,
         second_moment_dtype=args.second_moment_dtype,
+        quantized_epilogue=args.quantized_epilogue,
         stats_reduction=args.stats_reduction)
     tx = make_optimizer(opt_cfg)
 

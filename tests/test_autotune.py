@@ -1,0 +1,483 @@
+"""Shape-aware kernel autotuner + fused quantized epilogues.
+
+Covers the PR's acceptance criteria:
+  * every candidate TileConfig is allclose to the XLA reference across
+    ragged (N, d, k) pool shapes, including bf16 and int8 storage dtypes
+    (tile sizes change the f32 accumulation order, never the math);
+  * tune cache round-trip: tune -> serialize -> reload -> the registry
+    interns an identical KernelSet (CI determinism);
+  * the committed fixture validates against the candidate-space schema;
+  * tune modes: "off" pins defaults, "auto" is hit-or-default (never
+    measures), "force" measures and persists;
+  * the fused int8 path never materializes the f32 eigenvector stack in
+    the traced computation (jaxpr inspection — the dequantize lives inside
+    the pallas kernel);
+  * fused-engine parity: quantized_epilogue="on" agrees across backends
+    and stays close to the boundary-dequantized int8 engine.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
+
+from repro.core import api, quantize
+from repro.core.fd import FDState, fd_update_batched
+from repro.core.sketchy import SketchyConfig, sketchy
+from repro.kernels import autotune, registry
+from repro.kernels.gram import kernel as gram_kernel
+from repro.kernels.gram import ref as gram_ref
+from repro.kernels.lowrank import kernel as lowrank_kernel
+from repro.kernels.lowrank import ref as lowrank_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _restore_tune_state():
+    """Every test leaves the process-wide tune cache resolution as it found
+    it (default fixture path, auto mode)."""
+    yield
+    autotune.reload(path=autotune.DEFAULT_CACHE_PATH, mode="auto")
+
+
+def _mk(shape, dtype=jnp.float32):
+    x = RNG.normal(size=shape)
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.asarray(np.clip(np.round(x * 40), -127, 127), jnp.int8)
+    return jnp.asarray(x, dtype)
+
+
+# ------------------------------------------------------------ candidate space
+
+
+def test_candidates_dedupe_and_default_first():
+    cands = autotune.candidates("batched_gram", (4, 16, 8))
+    assert cands[0] == autotune.effective("batched_gram", (4, 16, 8),
+                                          autotune.DEFAULT_CONFIG)
+    assert len(cands) == len(set(cands))
+    # every candidate is already clamped to the shape (effective fixpoint)
+    for c in cands:
+        assert autotune.effective("batched_gram", (4, 16, 8), c) == c
+        assert c.bn_stack <= 4 and c.bk <= 8 and c.bd <= 16
+
+
+@settings(max_examples=6, deadline=None)
+@given(N=st.integers(1, 9), d=st.integers(3, 40), k=st.integers(2, 24),
+       dtype=st.sampled_from(["float32", "bfloat16", "int8"]))
+def test_every_gram_candidate_matches_ref(N, d, k, dtype):
+    """Property: ALL candidate tile configs compute the same Gram as the
+    XLA reference on ragged pool shapes — tiles only change the f32
+    accumulation order."""
+    dt = jnp.dtype(dtype)
+    a = _mk((N, d, k), dt)
+    want = np.asarray(gram_ref.batched_gram_ref(a))
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+    for cand in autotune.candidates("batched_gram", (N, d, k)):
+        got = gram_kernel.batched_gram_pallas(
+            a, bk=cand.bk, bd=cand.bd, bn_stack=cand.bn_stack, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol,
+                                   err_msg=f"candidate {tuple(cand)}")
+
+
+@pytest.mark.parametrize("N,d,k,r", [(1, 16, 8, 1), (5, 33, 8, 4),
+                                     (8, 64, 12, 3)])
+def test_every_mixed_gram_candidate_matches_ref(N, d, k, r):
+    vq = _mk((N, d, k), jnp.int8)
+    colw = jnp.abs(_mk((N, k))) + 0.1
+    a = _mk((N, d, r))
+    want = np.asarray(gram_ref.batched_gram_mixed_ref(vq, colw, a))
+    for cand in autotune.candidates("batched_gram_mixed", (N, d, k, r)):
+        got = gram_kernel.batched_gram_mixed_pallas(
+            vq, colw, a, bd=cand.bd, bn_stack=cand.bn_stack, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-5, err_msg=f"{tuple(cand)}")
+
+
+@pytest.mark.parametrize("N,d,ell,n", [(1, 16, 8, 16), (5, 33, 8, 20),
+                                       (7, 32, 4, 64)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_every_apply_candidate_matches_ref(N, d, ell, n, dtype):
+    dt = jnp.dtype(dtype)
+    u = _mk((N, d, ell), dt)
+    coeffs = _mk((N, ell))
+    base = jnp.abs(_mk((N,)))
+    g = _mk((N, d, n))
+    want = np.asarray(lowrank_ref.batched_lowrank_apply_ref(
+        u.astype(jnp.float32) if dt == jnp.int8 else u, coeffs, base, g))
+    tol = 0.05 if dt == jnp.bfloat16 else 1e-4
+    for cand in autotune.candidates("batched_lowrank_apply", (N, d, ell, n)):
+        got = lowrank_kernel.batched_lowrank_apply_pallas(
+            u, coeffs, base, g, bn=cand.bn, bn_stack=cand.bn_stack,
+            interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol,
+                                   err_msg=f"{tuple(cand)}")
+
+
+@pytest.mark.parametrize("N,d,k,r", [(1, 16, 8, 1), (5, 33, 8, 4)])
+def test_every_project_quantize_candidate_matches_ref(N, d, k, r):
+    e = k
+    vq = _mk((N, d, k), jnp.int8)
+    wt = _mk((N, k, e)) * 0.01
+    a = _mk((N, d, r))
+    wb = _mk((N, r, e))
+    vals_w, scale_w = lowrank_ref.batched_project_quantize_ref(vq, wt, a, wb)
+    shape = (N, d, k, r, e)
+    for cand in autotune.candidates("batched_project_quantize", shape):
+        vals, scale = lowrank_kernel.batched_project_quantize_pallas(
+            vq, wt, a, wb, bn_stack=cand.bn_stack, interpret=True)
+        # int8 outputs must match the reference quantizer bit for bit
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_w),
+                                      err_msg=f"{tuple(cand)}")
+        np.testing.assert_allclose(np.asarray(scale), np.asarray(scale_w),
+                                   rtol=1e-6, err_msg=f"{tuple(cand)}")
+
+
+# ------------------------------------------------------------------ tune modes
+
+
+def _write_cache(path, entries):
+    data = {"version": autotune.CACHE_VERSION,
+            "entries": {k: dict(v._asdict()) for k, v in entries.items()}}
+    with open(path, "w") as f:
+        json.dump(data, f)
+
+
+def test_mode_off_pins_defaults(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    key = autotune.key_for("batched_gram", (4, 16, 8), jnp.float32)
+    _write_cache(cache, {key: autotune.TileConfig(bn_stack=4, bk=8, bd=16)})
+    autotune.reload(path=cache, mode="off")
+    cfg = autotune.get_config("batched_gram", (4, 16, 8), jnp.float32)
+    assert cfg == autotune.effective("batched_gram", (4, 16, 8),
+                                     autotune.DEFAULT_CONFIG)
+    assert cfg.bn_stack == 1
+
+
+def test_mode_auto_hit_and_miss(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    key = autotune.key_for("batched_gram", (4, 16, 8), jnp.float32)
+    _write_cache(cache, {key: autotune.TileConfig(bn_stack=4, bk=8, bd=16)})
+    autotune.reload(path=cache, mode="auto")
+    hit = autotune.get_config("batched_gram", (4, 16, 8), jnp.float32)
+    assert hit.bn_stack == 4 and hit.bk == 8 and hit.bd == 16
+    # miss: default, and NO measurement side effect (file unchanged)
+    before = os.path.getmtime(cache)
+    miss = autotune.get_config("batched_gram", (9, 24, 6), jnp.float32)
+    assert miss == autotune.effective("batched_gram", (9, 24, 6),
+                                      autotune.DEFAULT_CONFIG)
+    assert os.path.getmtime(cache) == before
+
+
+def test_mode_force_tunes_and_persists(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    autotune.reload(path=cache, mode="force")
+    cfg = autotune.get_config("batched_gram", (3, 12, 6), jnp.float32)
+    assert cfg in autotune.candidates("batched_gram", (3, 12, 6))
+    with open(cache) as f:
+        data = json.load(f)
+    assert autotune.validate_cache(data) == []
+    key = autotune.key_for("batched_gram", (3, 12, 6), jnp.float32)
+    assert key in data["entries"]
+    # second lookup is a plain cache hit (no re-measure): same answer
+    assert autotune.get_config("batched_gram", (3, 12, 6),
+                               jnp.float32) == cfg
+
+
+# ------------------------------------------------- cache round-trip / interning
+
+
+def test_cache_roundtrip_reloads_identical_kernelset(tmp_path):
+    """tune -> serialize -> reload -> the registry interns an IDENTICAL
+    KernelSet (the determinism contract CI relies on)."""
+    cache = str(tmp_path / "cache.json")
+    autotune.reload(path=cache, mode="force")
+    tuned = autotune.get_config("batched_gram", (3, 12, 6), jnp.float32)
+
+    autotune.reload(path=cache, mode="auto")
+    snap1 = autotune.snapshot()
+    ks1 = registry.get_kernels("pallas")
+    assert ks1.tuned == snap1
+
+    autotune.reload(path=cache, mode="auto")   # re-read the same file
+    ks2 = registry.get_kernels("pallas")
+    assert ks2 is ks1                          # interned on equal snapshot
+    assert autotune.get_config("batched_gram", (3, 12, 6),
+                               jnp.float32) == tuned
+
+    # a different cache state yields a DIFFERENT set (no stale configs)
+    autotune.reload(path=str(tmp_path / "other.json"), mode="auto")
+    assert registry.get_kernels("pallas") is not ks1
+
+
+def test_kernel_sets_still_interned_per_backend():
+    ks_x = registry.get_kernels("xla")
+    ks_p = registry.get_kernels("pallas")
+    assert ks_x is registry.get_kernels("xla")
+    assert ks_p is registry.get_kernels("pallas")
+    assert ks_x.tuned == ks_p.tuned
+    for name in ("batched_gram_mixed", "batched_lowrank_apply_quantized",
+                 "batched_project_quantize"):
+        assert callable(getattr(ks_x, name)) and callable(getattr(ks_p, name))
+
+
+def test_committed_fixture_validates():
+    """The committed tune cache must stay inside the candidate-space schema
+    (also enforced by `python -m repro.kernels.autotune validate` in CI)."""
+    assert os.path.exists(autotune.DEFAULT_CACHE_PATH), \
+        "committed tune_cache.json fixture is missing"
+    with open(autotune.DEFAULT_CACHE_PATH) as f:
+        data = json.load(f)
+    assert autotune.validate_cache(data) == []
+
+
+def test_validate_cache_rejects_out_of_space_configs():
+    key = autotune.key_for("batched_gram", (4, 16, 8), jnp.float32)
+    bad = {"version": autotune.CACHE_VERSION,
+           "entries": {key: {"bn_stack": 3, "bk": 999, "bd": 256, "bn": 256}}}
+    assert autotune.validate_cache(bad)
+    bad2 = {"version": autotune.CACHE_VERSION,
+            "entries": {"cpu|nope|1x2x3|float32":
+                        {"bn_stack": 1, "bk": 128, "bd": 256, "bn": 256}}}
+    assert any("unknown kernel" in p for p in autotune.validate_cache(bad2))
+    assert autotune.validate_cache([]) \
+        and autotune.validate_cache({"version": 99, "entries": {}})
+
+
+# ------------------------------------------------------- fused no-f32 contract
+
+
+def _jaxprs_in(param):
+    if hasattr(param, "jaxpr"):          # ClosedJaxpr
+        return [param.jaxpr]
+    if hasattr(param, "eqns"):           # raw Jaxpr
+        return [param]
+    if isinstance(param, (list, tuple)):
+        return [j for p in param for j in _jaxprs_in(p)]
+    return []
+
+
+def _walk_avals(jaxpr, out):
+    """Every intermediate aval in the traced computation, EXCLUDING pallas
+    kernel bodies (in-kernel registers/VMEM are the point of fusion, not an
+    HBM materialization)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for param in eqn.params.values():
+            for sub in _jaxprs_in(param):
+                _walk_avals(sub, out)
+        for v in eqn.outvars:
+            out.append(v.aval)
+
+
+def _collect_avals(fn, *args):
+    closed = jax.make_jaxpr(fn)(*args)
+    out = []
+    _walk_avals(closed.jaxpr, out)
+    return out
+
+
+def test_fused_refresh_never_materializes_f32_stack():
+    """Acceptance criterion: with QuantizedPool state + pallas kernels, the
+    traced FD refresh contains NO f32 tensor of the eigenvector-stack shape
+    (N, d, ell) — dequantize happens in-registers inside the kernels.  The
+    boundary-dequant path (positive control) does materialize it."""
+    N, d, ell = 4, 32, 8
+    ks = registry.get_kernels("pallas")
+    qp = quantize.QuantizedPool(values=_mk((N, d, ell), jnp.int8),
+                                scale=jnp.abs(_mk((N, 1, 1))) * 0.01 + 1e-3)
+    s = jnp.abs(_mk((N, ell)))
+    rho = jnp.abs(_mk((N,)))
+    G = _mk((N, d, 1))
+
+    def fused(vals, scale, s, rho, G):
+        st = FDState(eigvecs=quantize.QuantizedPool(vals, scale),
+                     eigvals=s, rho=rho)
+        out = fd_update_batched(st, G, 0.99, kernels=ks)
+        return out.eigvecs.values, out.eigvecs.scale, out.eigvals, out.rho
+
+    banned = [a for a in _collect_avals(fused, qp.values, qp.scale, s, rho, G)
+              if getattr(a, "shape", None) == (N, d, ell)
+              and getattr(a, "dtype", None) == jnp.float32]
+    assert banned == [], f"fused path materialized f32 stacks: {banned}"
+
+    def boundary(vals, scale, s, rho, G):
+        u = quantize.dequantize_stack(vals, scale)
+        out = fd_update_batched(FDState(u, s, rho), G, 0.99, kernels=ks)
+        return out.eigvecs
+
+    control = [a for a in _collect_avals(boundary, qp.values, qp.scale, s,
+                                         rho, G)
+               if getattr(a, "shape", None) == (N, d, ell)
+               and getattr(a, "dtype", None) == jnp.float32]
+    assert control, "positive control: boundary dequant should materialize"
+
+
+def test_fused_apply_never_materializes_f32_stack():
+    N, d, ell, n = 4, 32, 8, 16
+    ks = registry.get_kernels("pallas")
+    vals, scale = _mk((N, d, ell), jnp.int8), jnp.abs(_mk((N, 1, 1))) * 0.01
+    coeffs, base, g = _mk((N, ell)), jnp.abs(_mk((N,))), _mk((N, d, n))
+    avals = _collect_avals(
+        lambda v, sc, c, b, gg: ks.batched_lowrank_apply_quantized(
+            v, sc, c, b, gg), vals, scale, coeffs, base, g)
+    banned = [a for a in avals if getattr(a, "shape", None) == (N, d, ell)
+              and getattr(a, "dtype", None) == jnp.float32]
+    assert banned == [], f"quantized apply materialized f32: {banned}"
+
+
+# ------------------------------------------------------------- fused FD / engine
+
+
+def test_fused_fd_update_matches_jnp_fallback():
+    """kernels=None and kernels=pallas produce byte-identical int8 output
+    for the quantized FD update (same Gram math, same rounding rule)."""
+    N, d, ell, r = 3, 24, 6, 2
+    qp = quantize.quantize_stack(_mk((N, d, ell)) * 0.1)
+    s = jnp.abs(_mk((N, ell)))
+    s = jnp.sort(s, axis=-1)[..., ::-1].at[..., -1].set(0.0)
+    rho = jnp.abs(_mk((N,))) * 0.1
+    G = _mk((N, d, r))
+    st = FDState(eigvecs=quantize.QuantizedPool(qp.values, qp.scale),
+                 eigvals=s, rho=rho)
+    out_jnp = fd_update_batched(st, G, 0.99, kernels=None)
+    out_pal = fd_update_batched(st, G, 0.99,
+                                kernels=registry.get_kernels("pallas"))
+    out_xla = fd_update_batched(st, G, 0.99,
+                                kernels=registry.get_kernels("xla"))
+    for a, b in ((out_jnp, out_pal), (out_jnp, out_xla)):
+        np.testing.assert_allclose(np.asarray(a.eigvals),
+                                   np.asarray(b.eigvals), rtol=2e-3,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(a.rho), np.asarray(b.rho),
+                                   rtol=1e-4, atol=1e-6)
+        assert isinstance(b.eigvecs, quantize.QuantizedPool)
+        assert api.untag(b.eigvecs.values).dtype == jnp.int8
+
+
+def _toy_params():
+    return {"w": jnp.asarray(RNG.normal(size=(48, 20)), jnp.float32),
+            "v": jnp.asarray(RNG.normal(size=(10,)), jnp.float32)}
+
+
+def _toy_grad(t, params):
+    r = np.random.default_rng(100 + t)
+    return {k: jnp.asarray(r.normal(size=v.shape), jnp.float32)
+            for k, v in params.items()}
+
+
+def _run_engine(params, *, backend, epilogue, dtype="int8", steps=5,
+                refresh_mode="inline"):
+    tx = sketchy(SketchyConfig(rank=8, block_size=32, update_every=2,
+                               kernel_backend=backend,
+                               second_moment_dtype=dtype,
+                               quantized_epilogue=epilogue,
+                               refresh_mode=refresh_mode))
+    s = tx.init(params)
+    outs = []
+    for t in range(steps):
+        u, s = tx.update(_toy_grad(t, params), s, params)
+        outs.append(u)
+    return outs, s
+
+
+def test_engine_fused_backends_agree():
+    params = _toy_params()
+    u_x, s_x = _run_engine(params, backend="xla", epilogue="on")
+    u_p, s_p = _run_engine(params, backend="pallas", epilogue="on")
+    for t in range(len(u_x)):
+        for a, b in zip(jax.tree.leaves(u_x[t]), jax.tree.leaves(u_p[t])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+    # fused storage: eigvec stacks stay QuantizedPool in engine state
+    key = next(iter(s_p.pools))
+    st = s_p.pools[key]
+    for side in (st.left, st.right):
+        assert isinstance(side.eigvecs, quantize.QuantizedPool)
+        assert api.untag(side.eigvecs.values).dtype == jnp.int8
+
+
+def test_engine_fused_tracks_boundary_dequant_direction():
+    """Fused int8 changes the rounding scheme, not the math: the update
+    direction stays cosine-aligned with the boundary-dequantized engine."""
+    params = _toy_params()
+    u_off, _ = _run_engine(params, backend="xla", epilogue="off")
+    u_on, _ = _run_engine(params, backend="xla", epilogue="on")
+    for t in range(len(u_off)):
+        for a, b in zip(jax.tree.leaves(u_off[t]), jax.tree.leaves(u_on[t])):
+            a, b = np.asarray(a).ravel(), np.asarray(b).ravel()
+            cos = np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b)
+                                  + 1e-30)
+            assert cos > 0.999, (t, cos)
+
+
+def test_engine_auto_is_off_on_xla_backend():
+    """quantized_epilogue="auto" only engages on the pallas backend: the
+    xla/CPU default keeps the PR-4 boundary-dequant numerics bitwise."""
+    params = _toy_params()
+    u_auto, _ = _run_engine(params, backend="xla", epilogue="auto")
+    u_off, _ = _run_engine(params, backend="xla", epilogue="off")
+    for t in range(len(u_auto)):
+        for a, b in zip(jax.tree.leaves(u_auto[t]), jax.tree.leaves(u_off[t])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_fused_async_refresh_parity():
+    """Fused int8 composes with the async one-step-stale refresh pipeline:
+    the committed pools after step t equal the inline pools at t bitwise
+    (the step-shifted parity contract), with the QuantizedPool pending
+    slots selecting/committing on raw int8 leaves."""
+    params = _toy_params()
+    _, s_in = _run_engine(params, backend="pallas", epilogue="on", steps=4)
+    u_as, s_as = _run_engine(params, backend="pallas", epilogue="on",
+                             steps=4, refresh_mode="async")
+    committed = api.committed_pools(s_as)
+    for key in s_in.pools:
+        for a, b in zip(jax.tree.leaves(api.untag(s_in.pools[key])),
+                        jax.tree.leaves(api.untag(committed[key]))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for u in u_as:
+        for leaf in jax.tree.leaves(u):
+            assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_engine_config_validates_epilogue():
+    with pytest.raises(ValueError, match="quantized_epilogue"):
+        api.EngineConfig(quantized_epilogue="maybe")
+
+
+def test_requantize_pool_passes_quantized_through():
+    """A QuantizedPool produced in-kernel is stored as-is (re-tagged), never
+    double-rounded."""
+    x = _mk((3, 8, 4)) * 0.1
+    tagged = quantize.quantize_pool(
+        api.tag(x, "second_moment", blocked=True), "int8")
+    fresh = quantize.quantize_stack(_mk((3, 8, 4)) * 0.2)
+    out = quantize.requantize_pool(tagged, fresh,
+                                   key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(api.untag(out.values)),
+                                  np.asarray(fresh.values))
+    np.testing.assert_array_equal(np.asarray(api.untag(out.scale)),
+                                  np.asarray(fresh.scale))
+    assert out.values.meta.role == "second_moment"
+
+
+def test_compute_view_keeps_containers():
+    x = _mk((3, 8, 4))
+    tagged = quantize.quantize_pool(
+        api.tag(x, "second_moment", blocked=True), "int8")
+    view = quantize.compute_view(tagged)
+    assert isinstance(view, quantize.QuantizedPool)
+    assert not isinstance(view.values, api.Tagged)
+    # and dequantizing the view matches the boundary dequant exactly
+    np.testing.assert_array_equal(
+        np.asarray(quantize.dequantize_stack(view.values, view.scale)),
+        np.asarray(quantize.dequantize_pool(tagged)))

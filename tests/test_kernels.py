@@ -160,6 +160,39 @@ def test_gram_low_precision_accumulates_in_f32(dtype):
                                   np.asarray(batched_gram_ref(aN)))
 
 
+def test_batched_kernels_empty_pool_group():
+    """N=0 guard: every batched kernel short-circuits an empty pool stack
+    (a 0-sized grid dim is undefined behaviour in some lowerings) and the
+    ``min(bn_stack, max(N, 1))`` clamp keeps any requested stacking legal —
+    shapes and dtypes must match the non-empty contract."""
+    from repro.kernels.gram.kernel import batched_gram_mixed_pallas
+    from repro.kernels.lowrank.kernel import batched_project_quantize_pallas
+
+    d, ell, k, n = 16, 4, 3, 5
+    a0 = jnp.zeros((0, d, k), jnp.float32)
+    out = batched_gram_pallas(a0, bn_stack=8)
+    assert out.shape == (0, k, k) and out.dtype == jnp.float32
+
+    vq0 = jnp.zeros((0, d, ell), jnp.int8)
+    colw0 = jnp.zeros((0, ell), jnp.float32)
+    out = batched_gram_mixed_pallas(vq0, colw0, a0, bn_stack=8)
+    assert out.shape == (0, ell + k, ell + k) and out.dtype == jnp.float32
+
+    u0 = jnp.zeros((0, d, ell), jnp.float32)
+    c0 = jnp.zeros((0, ell), jnp.float32)
+    b0 = jnp.zeros((0,), jnp.float32)
+    g0 = jnp.zeros((0, d, n), jnp.float32)
+    out = batched_lowrank_apply_pallas(u0, c0, b0, g0, bn_stack=8)
+    assert out.shape == (0, d, n) and out.dtype == jnp.float32
+
+    wt0 = jnp.zeros((0, ell, ell), jnp.float32)
+    wb0 = jnp.zeros((0, k, ell), jnp.float32)
+    vals, scale = batched_project_quantize_pallas(vq0, wt0, a0, wb0,
+                                                  bn_stack=8)
+    assert vals.shape == (0, d, ell) and vals.dtype == jnp.int8
+    assert scale.shape == (0, 1, 1) and scale.dtype == jnp.float32
+
+
 @pytest.mark.parametrize("B,Hq,Hkv,S,hd,causal", [
     (1, 2, 2, 64, 16, True),
     (2, 4, 2, 96, 32, True),     # GQA + ragged tiles
