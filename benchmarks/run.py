@@ -70,7 +70,14 @@ def bench_fig1_memory() -> None:
     from repro.core import api
     from repro.core.adam import AdamConfig, adam
     from repro.core.shampoo import ShampooConfig, shampoo
-    from repro.core.sketchy import SketchyConfig, sketchy
+    from repro.core.sketchy import RankBudget, SketchyConfig, sketchy
+
+    def _sk(rank, **kw):
+        # fixed-rank rows via the primary RankBudget spelling (the bare
+        # rank= alias is deprecated)
+        return sketchy(SketchyConfig(
+            rank_budget=RankBudget(min_k=rank, max_k=rank),
+            block_size=1024, **kw))
 
     params = {
         "ffn_in": jnp.zeros((1024, 4096), jnp.float32),
@@ -82,20 +89,26 @@ def bench_fig1_memory() -> None:
     txs = [
         ("adam", adam(AdamConfig())),
         ("shampoo", shampoo(ShampooConfig(block_size=1024))),
-        ("sketchy_l256", sketchy(SketchyConfig(rank=256, block_size=1024))),
-        ("sketchy_l64", sketchy(SketchyConfig(rank=64, block_size=1024))),
+        ("sketchy_l256", _sk(256)),
+        ("sketchy_l64", _sk(64)),
         # quantized pool storage (core/quantize.py): the same sketch state
         # held in bf16 / per-block int8 between steps
-        ("sketchy_l256_bf16", sketchy(SketchyConfig(
-            rank=256, block_size=1024, second_moment_dtype="bf16"))),
-        ("sketchy_l256_int8", sketchy(SketchyConfig(
-            rank=256, block_size=1024, second_moment_dtype="int8"))),
+        ("sketchy_l256_bf16", _sk(256, second_moment_dtype="bf16")),
+        ("sketchy_l256_int8", _sk(256, second_moment_dtype="int8")),
         # async refresh pipeline (core/api.py pending slot): transient
         # double buffer, must cost ZERO accounted second-moment bytes —
         # this row is byte-equal to sketchy_l256 and the memory gate blocks
         # on it (scripts/bench_gate.py)
-        ("sketchy_l256_async", sketchy(SketchyConfig(
-            rank=256, block_size=1024, refresh_mode="async"))),
+        ("sketchy_l256_async", _sk(256, refresh_mode="async")),
+        # rank-budget allocator (core/sketchy.RankBudget): per-block active
+        # ranks migrate inside fixed-capacity stacks, so the accounted
+        # footprint MUST stay byte-equal to the static sketchy_l256 row —
+        # the blocking memory gate holds this invariant (the (N,) int32
+        # active-rank vector is role="count", outside the Fig. 1 budget)
+        ("sketchy_l256_rank_budget", sketchy(SketchyConfig(
+            rank_budget=RankBudget(min_k=64, max_k=256,
+                                   policy="rho_greedy"),
+            block_size=1024))),
     ]
     rows = [(name, api.second_moment_bytes(jax.eval_shape(tx.init, params)))
             for name, tx in txs]
@@ -225,12 +238,31 @@ def bench_fig2_lm_quality(steps: int = 60) -> None:
     from repro.models import model as model_lib
     from repro.train.trainer import make_train_step
 
+    from repro.core import api
+    from repro.core.sketchy import RankBudget
+
     cfg = get_reduced("paper_lm_100m")
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))
-    for name, lr in (("sketchy", 5e-3), ("shampoo", 5e-3), ("adam", 5e-3)):
+    # the rank_budget row trains at HALF the fixed-rank row's total sketch
+    # rank (rho_greedy migration inside max_k=8-capacity stacks) — an
+    # advisory quality row, not a gated one.  Block count probed from shape
+    # structs so the explicit total tracks the reduced arch.
+    params0 = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    probe = make_optimizer(OptimizerConfig(
+        name="sketchy", rank=8, block_size=32, update_every=2,
+        total_steps=steps, schedule="constant"))
+    nblocks = sum(len(g["k"]) for g in api.rank_allocation(
+        jax.eval_shape(probe.init, params0))["groups"].values())
+    half_budget = RankBudget(total=max(nblocks * 8 // 2, nblocks * 2),
+                             min_k=2, max_k=8, policy="rho_greedy",
+                             realloc_every=1)
+    variants = [("sketchy", 5e-3, None), ("shampoo", 5e-3, None),
+                ("adam", 5e-3, None), ("rank_budget", 5e-3, half_budget)]
+    for name, lr, budget in variants:
         tx = make_optimizer(OptimizerConfig(
-            name=name, learning_rate=lr, rank=8, block_size=32,
+            name="sketchy" if budget is not None else name,
+            learning_rate=lr, rank=8, rank_budget=budget, block_size=32,
             update_every=2, total_steps=steps, schedule="constant"))
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
         state = tx.init(params)

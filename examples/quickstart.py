@@ -37,6 +37,35 @@ factors dominate):
 ``main()`` below prints the exact before/after int8 numbers for the current
 config (no state materialization — ``jax.eval_shape`` over ``tx.init``).
 
+Rank budget knobs
+-----------------
+``rank`` pins every block to the same sketch size.  The primary spelling is
+``OptimizerConfig(rank_budget=RankBudget(...))`` (core/sketchy.py): one
+fixed TOTAL sketch rank shared by all pooled blocks, with a per-block
+allocation policy:
+
+  * ``RankBudget(min_k=r, max_k=r, policy="static")`` — what ``rank=r``
+    normalizes to; every block at capacity forever, bitwise-identical to
+    the pre-budget engine.
+  * ``RankBudget(total=K, min_k=..., max_k=..., policy="rho_greedy",
+    realloc_every=j)`` — every ``j * update_every`` steps the total K is
+    re-poured across blocks by descending escaped-mass pressure
+    ``rho / (trace + rho)``: blocks whose sketch drops the most mass grow
+    (masked zero columns unmask), over-provisioned blocks shrink by exact
+    Robust-FD deflation (dropped eigenvalue mass folds into ``rho``).
+
+Memory does NOT follow the active ranks: stacks are allocated at ``max_k``
+capacity and ``second_moment_bytes`` is byte-identical to a static run at
+``rank=max_k`` (the ``fig1_memory_sketchy_l256_rank_budget`` row is held
+byte-equal to ``sketchy_l256`` by the blocking memory gate).  What moves is
+where the *effective* rank sits — measured live via
+``api.rank_allocation(opt_state)``, printed below: per pool group the
+active ranks ``k``, per-block escaped mass ``rho``, and ``budget_share =
+k / K``.  The deprecated ``SketchyConfig(rank=...)`` spelling still works
+(DeprecationWarning; see the CHANGES.md migration table), and pre-budget
+fixed-rank checkpoints restore into budgeted runs via a migration shim
+(train/checkpoint.py).
+
 Distributed sketching
 ---------------------
 Under data parallelism the default (``stats_reduction="replicated"``)
@@ -172,6 +201,19 @@ def main():
     int8_bytes = api.second_moment_bytes(jax.eval_shape(tx_int8.init, params))
     print(f"second-moment bytes with second_moment_dtype='int8': "
           f"{int8_bytes} ({fp32_bytes / int8_bytes:.1f}x smaller)")
+
+    # rank-budget introspection: per-pool active sketch ranks (for this
+    # static config every block sits at the ladder capacity; under
+    # rank_budget=RankBudget(policy="rho_greedy") the same call shows the
+    # budget migrating toward high-rho blocks while the bytes above stay
+    # fixed at max_k capacity)
+    alloc = api.rank_allocation(opt_state)
+    print(f"rank allocation (total K = {alloc['total']}):")
+    for key, grp in alloc["groups"].items():
+        ks = grp["k"]
+        share = 100.0 * float(grp["budget_share"].sum())
+        print(f"  pool {key}: {len(ks)} blocks, k={ks.min()}..{ks.max()}, "
+              f"{share:.0f}% of budget, mean rho {grp['rho'].mean():.2e}")
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=8))

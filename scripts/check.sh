@@ -22,6 +22,12 @@
 #                                             fused-epilogue jaxpr pins,
 #                                             then the committed fixture's
 #                                             schema validation
+#   scripts/check.sh budget [extra args]      rank-budget allocator: the
+#                                             static-policy bitwise-parity
+#                                             matrix first, then allocator
+#                                             properties, rho_greedy
+#                                             migration, and checkpoint
+#                                             migration
 # Extra pytest args reach EVERY pytest invocation of the chosen tier,
 # including the kernels tier that the full tier runs first.
 # All tiers run a compileall syntax gate first so breakage surfaces before
@@ -97,6 +103,25 @@ fi
 if [[ "${1:-}" == "tune" ]]; then
   shift
   tune_tier "$@"
+  exit 0
+fi
+
+budget_tier() {
+  # parity FIRST: RankBudget(policy="static") must stay bitwise-identical
+  # to the pre-budget engine across the schedule x mode x dtype matrix —
+  # a parity break fails the tier before the allocator property tests,
+  # the rho_greedy migration checks, and the fixed-rank checkpoint shim
+  python -m pytest -x -q \
+    "tests/test_rank_budget.py::test_static_policy_bitwise_parity" \
+    "$@"
+  python -m pytest -x -q tests/test_rank_budget.py \
+    --deselect tests/test_rank_budget.py::test_static_policy_bitwise_parity \
+    "$@"
+}
+
+if [[ "${1:-}" == "budget" ]]; then
+  shift
+  budget_tier "$@"
   exit 0
 fi
 

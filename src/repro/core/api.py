@@ -76,6 +76,14 @@ class StateMeta:
     # copy of a statistic) and dropped by checkpoint save/restore
     # (train/checkpoint.py zero-fills them on load).
     transient: bool = False
+    # Telemetry labels for metadata-driven read APIs (``rank_allocation``):
+    # implementations mark e.g. the per-block active-rank vector
+    # ("active_rank"), the escaped-mass scalar ("rho"), or the eigenvalue
+    # ladder ("eigvals").  ``group`` is stamped by the engine with the
+    # owning pool's group key at init.  Neither is persisted in checkpoint
+    # manifests (restore templates re-derive them from code).
+    label: Optional[str] = None
+    group: Optional[str] = None
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -164,6 +172,65 @@ def second_moment_bytes(state: PyTree) -> int:
                 and not meta.transient:
             total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
     return total
+
+
+def rank_allocation(state: PyTree) -> dict:
+    """Per-block sketch-rank allocation by metadata traversal — the read
+    API of the rank-budget allocator, mirroring ``second_moment_bytes``:
+    works on any state pytree (bare engine state, named chain, injected
+    optimizer state) with no isinstance-dispatch on optimizer containers.
+
+    Returns ``{"total": K, "groups": {group_key: {"k", "rho",
+    "budget_share"}}}`` with per-block (N,) arrays per pool group:
+    ``k`` the active ranks (for static engines, the ladder capacity —
+    every block at the configured rank), ``rho`` the per-block escaped
+    mass summed over sketch sides, and ``budget_share = k / K``.  On
+    ``jax.eval_shape`` structs the rank vector falls back to capacity and
+    ``rho`` to zeros (shapes carry no values).
+    """
+    import numpy as np
+
+    concrete = lambda x: not isinstance(x, jax.ShapeDtypeStruct)
+    per: dict = {}
+    for meta, leaf in leaves_with_meta(state):
+        if meta is None or meta.transient or meta.group is None \
+                or meta.label is None:
+            continue
+        g = per.setdefault(meta.group, {"k": None, "rho": [], "ladder": []})
+        if meta.label == "active_rank":
+            g["k"] = leaf
+        elif meta.label == "rho":
+            g["rho"].append(leaf)
+        elif meta.label == "eigvals":
+            g["ladder"].append(leaf)
+    if not per:
+        raise ValueError("no sketch state found (state carries no labelled "
+                         "StateMeta leaves)")
+
+    ks = {}
+    for key, g in sorted(per.items()):
+        if g["k"] is not None and concrete(g["k"]):
+            ks[key] = np.asarray(g["k"], dtype=np.int64)
+        else:
+            # static engine (or shape structs): active rank == ladder
+            # capacity, i.e. the configured rank clipped per side — report
+            # the wider side
+            n = g["ladder"][0].shape[0] if g["ladder"] \
+                else g["k"].shape[0]
+            cap = max((l.shape[-1] for l in g["ladder"]), default=0)
+            ks[key] = np.full((n,), cap, dtype=np.int64)
+    total = int(sum(int(k.sum()) for k in ks.values()))
+
+    groups = {}
+    for key, g in sorted(per.items()):
+        k = ks[key]
+        rho_leaves = [r for r in g["rho"] if concrete(r)]
+        rho = (np.sum([np.asarray(r, np.float64) for r in rho_leaves],
+                      axis=0)
+               if rho_leaves else np.zeros(k.shape, np.float64))
+        groups[key] = {"k": k, "rho": rho,
+                       "budget_share": k / max(total, 1)}
+    return {"total": total, "groups": groups}
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +364,15 @@ class EngineConfig:
     #     inline's at step t exactly (step-shifted parity, including int8
     #     storage: the pending slot is quantized with the step-t keys).
     refresh_mode: str = "inline"
+    # Cross-pool rank-budget reallocation cadence, in refresh windows: every
+    # ``realloc_every * update_every`` steps the engine hands ALL refreshed
+    # pool stacks to the implementation's ``realloc_pools(groups, stacks)``
+    # hook (rank-budget allocator, core/sketchy.py) right after the refresh
+    # and before precondition/requantize.  0 (default) disables the hook —
+    # the engine loop is then exactly the pre-budget one.  Under
+    # ``refresh_mode="async"`` the reallocation rides the pending-slot
+    # refresh and commits at t+1 with it (step-shifted parity preserved).
+    realloc_every: int = 0
     # Emit jax.named_scope + jax.profiler.TraceAnnotation spans around the
     # engine's update_stats / refresh-launch / commit / precondition phases
     # so the refresh leaving the critical path is visible in a device trace.
@@ -332,6 +408,9 @@ class EngineConfig:
             raise ValueError(
                 f"unknown quantized_epilogue {self.quantized_epilogue!r}; "
                 f"expected one of {QUANTIZED_EPILOGUES}")
+        if self.realloc_every < 0:
+            raise ValueError(
+                f"realloc_every must be >= 0, got {self.realloc_every}")
 
 
 class LeafState(NamedTuple):
@@ -442,6 +521,17 @@ def _batched_method(precond: "Preconditioner", name: str):
         lambda ss, GG: per_block(ss, GG, count=count))(s, G)
 
 
+def _stamp_group(tree: PyTree, key: str) -> PyTree:
+    """Copy of a tagged tree with every StateMeta stamped with its pool
+    group key — what lets ``rank_allocation`` bucket leaves per pool
+    without touching optimizer-specific containers."""
+    def one(x):
+        if _is_tagged(x):
+            return Tagged(x.value, dataclasses.replace(x.meta, group=key))
+        return x
+    return jax.tree.map(one, tree, is_leaf=_is_tagged)
+
+
 def _mark_transient(tree: PyTree) -> PyTree:
     """Copy of a tagged tree with every StateMeta marked ``transient`` — the
     pending-slot layout: same structure/sharding as the live pools, excluded
@@ -546,15 +636,24 @@ def scale_by_preconditioner(precond: Preconditioner,
             return PrecondState(count=count, pools={}, leaves=leaves)
 
         index = index_of([p.shape for p in flat])
-        pools = {}
+        stacks = {}
         for grp in index.groups:
             base = precond.init_block(grp.info)
-            stacked = jax.tree.map(
+            stacks[grp.key] = jax.tree.map(
                 lambda x, n=grp.num_blocks:
                     jnp.broadcast_to(x, (n,) + x.shape), base)
+        # cross-pool init hook (rank-budget allocator): the implementation
+        # sees every broadcast stack at once — the first point where the
+        # total block count (and so the resolved budget) is known
+        finalize = getattr(precond, "finalize_init_pools", None)
+        if finalize is not None:
+            stacks = finalize(index.groups, stacks)
+        pools = {}
+        for grp in index.groups:
             # storage layout: quantized between steps (deterministic at init
             # — the stats are zeros/identity, nothing to dither)
-            pools[grp.key] = quantize.quantize_pool(stacked, qdtype)
+            pools[grp.key] = _stamp_group(
+                quantize.quantize_pool(stacks[grp.key], qdtype), grp.key)
         leaves = []
         for i, (p, plan) in enumerate(zip(flat, index.leaves)):
             if plan.group is None:
@@ -683,23 +782,50 @@ def scale_by_preconditioner(precond: Preconditioner,
                 s, G, count=count, axis=cfg.stats_axis, axis_size=axis_size)
         is_async = cfg.refresh_mode == "async" and state.pending is not None
         spans = cfg.profile_annotations
+        realloc_fn = getattr(precond, "realloc_pools", None)
+        do_realloc = (cfg.realloc_every > 0 and realloc_fn is not None
+                      and len(index.groups) > 0)
+
+        def gkey_of(gi):
+            return None if qkey is None else jax.random.fold_in(qkey, gi)
+
+        def maybe_realloc(raws):
+            """Gated cross-pool rank-budget reallocation over ALL refreshed
+            stacks at once (the budget is global, so the hook must see every
+            pool): a no-op unless the implementation opts in via
+            ``realloc_pools`` and ``cfg.realloc_every > 0``."""
+            if not do_realloc:
+                return raws
+            period = max(cfg.update_every, 1) * cfg.realloc_every
+            return jax.lax.cond(
+                ((count % period) == 0) & (count > 0),
+                lambda r: realloc_fn(index.groups, r), lambda r: r, raws)
+
         new_pools, pooled_dirs = {}, {}
         new_pending = {} if is_async else None
-        for gi, grp in enumerate(index.groups):
-            gb = packed[grp.key]
-            gb_stats = packed_stats[grp.key]
-            gkey = None if qkey is None else jax.random.fold_in(qkey, gi)
-            if not is_async:
+        if not is_async:
+            # pass 1: accumulate + (gated) refresh every pool stack
+            raws = {}
+            for grp in index.groups:
+                gb_stats = packed_stats[grp.key]
                 raw = pool_compute(state.pools[grp.key])
                 with _span("precond/update_stats", spans):
                     raw = update_stats_b(raw, gb_stats, count)
                 with _span("precond/refresh", spans):
-                    raw = refresh_group(grp, raw, gb_stats, count, vrefresh)
+                    raws[grp.key] = refresh_group(grp, raw, gb_stats, count,
+                                                  vrefresh)
+            raws = maybe_realloc(raws)
+            # pass 2: precondition + requantize from the (possibly
+            # reallocated) refreshed stacks.  With realloc off this computes
+            # exactly what the former single fused loop did, value for value.
+            for gi, grp in enumerate(index.groups):
+                raw = raws[grp.key]
                 with _span("precond/precondition", spans):
-                    pooled_dirs[grp.key] = precondition_b(raw, gb, count)
+                    pooled_dirs[grp.key] = precondition_b(
+                        raw, packed[grp.key], count)
                 new_pools[grp.key] = quantize.requantize_pool(
-                    state.pools[grp.key], raw, key=gkey)
-                continue
+                    state.pools[grp.key], raw, key=gkey_of(gi))
+        else:
             # async one-step-stale pipeline.  Per step t:
             #   1. commit: fold the refresh launched at t-1 (pending slot)
             #      over the live stack — a cheap elementwise select in
@@ -713,27 +839,43 @@ def scale_by_preconditioner(precond: Preconditioner,
             #      committed at t+1.
             # The commit therefore lands exactly what inline computed at t-1
             # (same refresh, same quantization keys), one step later.
-            slot = state.pending[grp.key]
-            live = state.pools[grp.key]
-            with _span("precond/commit", spans):
-                committed = tag_like(live, pool.commit_select(
-                    slot.valid.value, untag(slot.stats), untag(live)))
-            raw = pool_compute(committed)
-            with _span("precond/update_stats", spans):
-                raw = update_stats_b(raw, gb_stats, count)
-            with _span("precond/precondition", spans):
-                pooled_dirs[grp.key] = precondition_b(raw, gb, count)
-            with _span("precond/refresh_launch", spans):
-                refreshed = refresh_group(grp, raw, gb_stats, count, vrefresh)
-            # live stack stores the pre-refresh stats, pending the refreshed
-            # ones — both under the step-t quantization keys, so whichever
-            # side the next commit selects is bitwise what inline stored
-            new_pools[grp.key] = quantize.requantize_pool(
-                live, raw, key=gkey)
-            new_pending[grp.key] = PendingSlot(
-                stats=quantize.requantize_pool(slot.stats, refreshed,
-                                               key=gkey),
-                valid=Tagged(jnp.ones([], bool), slot.valid.meta))
+            raws_pre, refreshed = {}, {}
+            for grp in index.groups:
+                gb_stats = packed_stats[grp.key]
+                slot = state.pending[grp.key]
+                live = state.pools[grp.key]
+                with _span("precond/commit", spans):
+                    committed = tag_like(live, pool.commit_select(
+                        slot.valid.value, untag(slot.stats), untag(live)))
+                raw = pool_compute(committed)
+                with _span("precond/update_stats", spans):
+                    raw = update_stats_b(raw, gb_stats, count)
+                with _span("precond/precondition", spans):
+                    pooled_dirs[grp.key] = precondition_b(
+                        raw, packed[grp.key], count)
+                with _span("precond/refresh_launch", spans):
+                    refreshed[grp.key] = refresh_group(grp, raw, gb_stats,
+                                                       count, vrefresh)
+                raws_pre[grp.key] = raw
+            # reallocation rides the refresh pipeline: it lands in the
+            # pending slot and commits at t+1 together with the refresh, so
+            # the step-shifted parity contract is preserved
+            refreshed = maybe_realloc(refreshed)
+            for gi, grp in enumerate(index.groups):
+                slot = state.pending[grp.key]
+                live = state.pools[grp.key]
+                gkey = gkey_of(gi)
+                # live stack stores the pre-refresh stats, pending the
+                # refreshed ones — both under the step-t quantization keys,
+                # so whichever side the next commit selects is bitwise what
+                # inline stored
+                new_pools[grp.key] = quantize.requantize_pool(
+                    live, raws_pre[grp.key], key=gkey)
+                new_pending[grp.key] = PendingSlot(
+                    stats=quantize.requantize_pool(slot.stats,
+                                                   refreshed[grp.key],
+                                                   key=gkey),
+                    valid=Tagged(jnp.ones([], bool), slot.valid.meta))
 
         # Per-leaf residue: diag fallback, grafting norms, gating.
         out, new_leaves = [], []

@@ -34,6 +34,12 @@ class OptimizerConfig:
     schedule: str = "warmup_cosine"    # warmup_cosine | constant
     # sketchy/shampoo specific
     rank: int = 256
+    # Sketch-rank budget (sketchy only; see core/sketchy.RankBudget): a
+    # fixed total rank shared across all pooled blocks plus the per-block
+    # allocation policy.  None keeps the uniform static allocation at
+    # ``rank`` (exactly the pre-budget behavior); a RankBudget supersedes
+    # ``rank`` for the direction stage.
+    rank_budget: Optional[sketchy_lib.RankBudget] = None
     block_size: int = 1024
     update_every: int = 10
     start_preconditioning_step: int = 0
@@ -76,8 +82,14 @@ class OptimizerConfig:
 
 def _direction(cfg: OptimizerConfig, beta2) -> transform.GradientTransformation:
     if cfg.name == "sketchy":
+        # construct the budget explicitly (the deprecated rank= spelling
+        # would warn on every step — _direction runs inside the injected
+        # chain's update)
+        budget = cfg.rank_budget if cfg.rank_budget is not None \
+            else sketchy_lib.RankBudget(min_k=cfg.rank, max_k=cfg.rank,
+                                        policy="static")
         return sketchy_lib.sketchy(sketchy_lib.SketchyConfig(
-            rank=cfg.rank, block_size=cfg.block_size, beta2=beta2,
+            rank_budget=budget, block_size=cfg.block_size, beta2=beta2,
             update_every=cfg.update_every,
             start_preconditioning_step=cfg.start_preconditioning_step,
             refresh_schedule=cfg.refresh_schedule,

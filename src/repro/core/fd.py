@@ -106,13 +106,22 @@ def fd_update(state: FDState, new_factor: jnp.ndarray, beta2: float = 1.0,
 
 
 def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
-                      beta2: float = 1.0, kernels=None) -> FDState:
+                      beta2: float = 1.0, kernels=None,
+                      active_k: jnp.ndarray | None = None) -> FDState:
     """``fd_update`` over a whole packed pool stack in one batched call.
 
     ``state`` leaves carry a leading pool dim N (eigvecs (N, d, ell), eigvals
     (N, ell), rho (N,)); ``new_factor`` is (N, d, r).  With ``kernels`` the
     Gram goes through ``kernels.batched_gram`` (grid-over-N Pallas on TPU);
     without, the jnp expressions mirror ``jax.vmap(fd_update)`` exactly.
+
+    Masked ranks: ``active_k`` (N,) int restricts block ``b`` to its leading
+    ``active_k[b]`` ladder columns — the stack keeps full ``ell`` capacity
+    (shapes never change) but the FD recurrence runs at the smaller rank:
+    only the active columns enter the Gram, deflation subtracts
+    ``lam[active_k[b]-1]`` instead of ``lam[ell-1]``, and columns at or past
+    ``active_k[b]`` come back exactly zero.  ``active_k=None`` is the
+    unmasked path, bitwise-identical to before the rank-budget allocator.
 
     Quantized compute path: when ``state.eigvecs`` is a ``QuantizedPool``
     (int8 values + per-block scale; the engine's fused int8 mode keeps the
@@ -133,7 +142,7 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
     U, s, rho = state
     if _is_quantized(U):
         return _fd_update_batched_quantized(U, s, rho, new_factor, beta2,
-                                            kernels)
+                                            kernels, active_k)
     _, d, ell = U.shape
     if new_factor.ndim == 2:
         new_factor = new_factor[..., None]
@@ -142,6 +151,9 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
     # non-negative clamp mirrors fd_update: free in fp32, NaN guard under
     # quantized storage
     s_clamped = jnp.maximum(beta2 * s.astype(compute_dtype), 0.0)
+    kmask = _rank_mask(active_k, ell)
+    if kmask is not None:
+        s_clamped = jnp.where(kmask, s_clamped, 0.0)
     B = U.astype(compute_dtype) * jnp.sqrt(s_clamped)[:, None, :]
     M = jnp.concatenate([B, new_factor.astype(compute_dtype)], axis=2)
 
@@ -156,18 +168,37 @@ def fd_update_batched(state: FDState, new_factor: jnp.ndarray,
     V = V[..., ::-1]
 
     lam_top = lam[..., :ell]
-    rho_t = lam_top[..., ell - 1]           # (N,)
+    rho_t = _escaped_eigval(lam_top, active_k, ell)   # (N,)
 
     inv_sqrt = jnp.where(lam_top > 1e-30,
                          jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
     U_new = jnp.matmul(M, V[..., :ell]) * inv_sqrt[:, None, :]
     s_new = lam_top - rho_t[..., None]
+    if kmask is not None:
+        U_new = jnp.where(kmask[:, None, :], U_new, 0.0)
+        s_new = jnp.where(kmask, s_new, 0.0)
 
     return FDState(
         eigvecs=U_new.astype(U.dtype),
         eigvals=s_new.astype(s.dtype),
         rho=(beta2 * rho + rho_t).astype(state.rho.dtype),
     )
+
+
+def _rank_mask(active_k, ell: int):
+    """(N, ell) bool mask of active ladder columns, or None when unmasked."""
+    if active_k is None:
+        return None
+    kk = jnp.clip(active_k, 1, ell)
+    return jnp.arange(ell)[None, :] < kk[:, None]
+
+
+def _escaped_eigval(lam_top: jnp.ndarray, active_k, ell: int) -> jnp.ndarray:
+    """Per-block deflation eigenvalue: ``lam[k-1]`` at the active rank."""
+    if active_k is None:
+        return lam_top[..., ell - 1]
+    kk = jnp.clip(active_k, 1, ell)
+    return jnp.take_along_axis(lam_top, kk[:, None] - 1, axis=-1)[..., 0]
 
 
 def _is_quantized(x) -> bool:
@@ -177,8 +208,8 @@ def _is_quantized(x) -> bool:
     return isinstance(x, quantize.QuantizedPool)
 
 
-def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
-                                 ) -> FDState:
+def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels,
+                                 active_k=None) -> FDState:
     """``fd_update_batched`` with the eigenvector stack in int8 pool storage
     end to end; see the caller's docstring for the scale-folding algebra."""
     from repro.core import quantize
@@ -190,6 +221,11 @@ def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
     A = new_factor.astype(jnp.float32)       # (N, d, r)
 
     s_clamped = jnp.maximum(beta2 * s.astype(jnp.float32), 0.0)
+    kmask = _rank_mask(active_k, ell)
+    if kmask is not None:
+        # masking the column weights zeroes inactive columns of B exactly,
+        # regardless of what the int8 values hold there
+        s_clamped = jnp.where(kmask, s_clamped, 0.0)
     colw = scale.reshape(N, 1) * jnp.sqrt(s_clamped)   # (N, ell)
 
     if kernels is None:
@@ -205,7 +241,7 @@ def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
     V = V[..., ::-1]
 
     lam_top = lam[..., :ell]
-    rho_t = lam_top[..., ell - 1]           # (N,)
+    rho_t = _escaped_eigval(lam_top, active_k, ell)   # (N,)
 
     inv_sqrt = jnp.where(lam_top > 1e-30,
                          jax.lax.rsqrt(jnp.maximum(lam_top, 1e-30)), 0.0)
@@ -213,6 +249,10 @@ def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
     # fold the column weights into the top half so the projection consumes
     # the raw int8 values directly
     W = V[..., :ell] * inv_sqrt[:, None, :]           # (N, ell+r, ell)
+    if kmask is not None:
+        # masking W's output columns keeps inactive eigenvector columns at
+        # zero through the in-kernel quantization as well
+        W = jnp.where(kmask[:, None, :], W, 0.0)
     w_top = colw[..., None] * W[..., :ell, :]         # (N, ell, ell)
     w_bot = W[..., ell:, :]                           # (N, r, ell)
 
@@ -225,11 +265,47 @@ def _fd_update_batched_quantized(U, s, rho, new_factor, beta2, kernels
         qp = quantize.QuantizedPool(values=values, scale=scale_new)
 
     s_new = lam_top - rho_t[..., None]
+    if kmask is not None:
+        s_new = jnp.where(kmask, s_new, 0.0)
     return FDState(
         eigvecs=qp,
         eigvals=s_new.astype(s.dtype),
         rho=(beta2 * rho + rho_t).astype(rho.dtype),
     )
+
+
+def fd_resize_batched(state: FDState, new_k: jnp.ndarray) -> FDState:
+    """Move each block of a pooled sketch stack to a new active rank.
+
+    Capacity (array shapes) never changes — this is the rank-*migration*
+    primitive for the budget allocator.  Shrinking block ``b`` to
+    ``new_k[b]`` folds the dropped eigenvalue mass into ``rho`` exactly
+    (Robust-FD redistribution: ``rho += sum_{i >= new_k} s_i``) and zeroes
+    the dropped ladder columns in place, so the per-block FD guarantee
+    ``||G - sketch|| <= rho`` is preserved.  Growing is free: columns at or
+    past the old active rank are already zero and simply become eligible
+    for the next masked ``fd_update_batched``.
+
+    Works on fp32/bf16 stacks and on ``QuantizedPool`` eigenvector storage
+    (int8 values are masked in place; the per-block scale is unchanged).
+    """
+    U, s, rho = state
+    quantized = _is_quantized(U)
+    ell = (U.values if quantized else U).shape[-1]
+    kmask = _rank_mask(new_k, ell)                      # (N, ell)
+    s_f = s.astype(jnp.float32)
+    dropped = jnp.sum(jnp.where(kmask, 0.0, s_f), axis=-1)   # (N,)
+    s_new = jnp.where(kmask, s_f, 0.0).astype(s.dtype)
+    rho_new = (rho.astype(jnp.float32) + dropped).astype(rho.dtype)
+    if quantized:
+        from repro.core import quantize
+        U_new = quantize.QuantizedPool(
+            values=jnp.where(kmask[:, None, :], U.values,
+                             jnp.zeros((), jnp.int8)),
+            scale=U.scale)
+    else:
+        U_new = jnp.where(kmask[:, None, :], U, 0.0).astype(U.dtype)
+    return FDState(eigvecs=U_new, eigvals=s_new, rho=rho_new)
 
 
 def fd_weighted_factor(state: FDState, *, drop_deflated: bool = False

@@ -148,6 +148,53 @@ def block_ids(group: PoolGroup) -> jnp.ndarray:
     return jnp.arange(group.num_blocks, dtype=jnp.int32)
 
 
+def uniform_ranks(n: int, total: int, min_k: int, max_k: int) -> jnp.ndarray:
+    """Deterministic initial allocation: spread ``total`` over ``n`` blocks
+    as evenly as possible (earlier blocks get the remainder), clipped to
+    ``[min_k, max_k]``.  Feasibility (``n*min_k <= total <= n*max_k``) is
+    validated by the caller at config time."""
+    base = total // n
+    k = base + (jnp.arange(n) < (total - base * n))
+    return jnp.clip(k, min_k, max_k).astype(jnp.int32)
+
+
+def allocate_ranks(pressure: jnp.ndarray, *, total: int, min_k: int,
+                   max_k) -> jnp.ndarray:
+    """Greedy waterfill of a fixed total rank budget by descending pressure.
+
+    Every block is floored at ``min_k``; the remaining budget
+    ``R = total - sum(min_k)`` is poured into blocks in descending
+    ``pressure`` order, each taking up to its headroom ``max_k - min_k``
+    before the next one gets any.  Exact and jit-friendly: one stable
+    argsort (ties break by block index, so the allocation is deterministic)
+    plus a cumulative sum — no data-dependent control flow, so it runs
+    under ``lax.cond`` at refresh boundaries.
+
+    Args:
+      pressure: (N,) per-block starvation signal (e.g. the escaped-mass
+        ratio ``rho / (trace + rho)`` — high means the sketch is dropping
+        mass and wants more columns).
+      total: fixed budget ``K_total`` with ``sum(result) == total`` whenever
+        ``N*min_k <= total <= sum(max_k)`` (guaranteed at config time).
+      min_k: scalar per-block floor.
+      max_k: scalar or (N,) per-block ceiling (capacity ``min(ell, d)``).
+
+    Returns:
+      (N,) int32 ranks with ``min_k <= k_b <= max_k``.
+    """
+    n = pressure.shape[0]
+    max_k = jnp.broadcast_to(jnp.asarray(max_k, jnp.int32), (n,))
+    room = jnp.maximum(max_k - min_k, 0)                     # (N,)
+    budget = jnp.clip(total - n * min_k, 0, jnp.sum(room))
+    order = jnp.argsort(-pressure, stable=True)              # descending
+    room_sorted = room[order]
+    ahead = jnp.cumsum(room_sorted) - room_sorted            # taken by better-ranked
+    give_sorted = jnp.clip(budget - ahead, 0, room_sorted)
+    give = jnp.zeros((n,), jnp.int32).at[order].set(
+        give_sorted.astype(jnp.int32))
+    return (min_k + give).astype(jnp.int32)
+
+
 def commit_select(valid, pending, live):
     """Storage-level commit of an in-flight refresh cohort
     (``refresh_mode="async"``, core/api.py): where ``valid``, take the

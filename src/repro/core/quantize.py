@@ -35,6 +35,14 @@ The scale/round core (absmax -> int8 range, stochastic rounding for
 unbiased repeated quantize-accumulate cycles) is shared with the int8
 gradient all-reduce in ``train/compression.py`` — one rounding rule for
 state at rest and gradients in flight.
+
+Rank-budgeted stacks (core/sketchy.RankBudget) quantize transparently:
+blocks running below ladder capacity keep their masked eigenvector columns
+exactly zero (absmax scaling maps 0 -> 0, so masking survives the int8
+round-trip), and the per-block active-rank vector ``k`` is an int32 count
+leaf — never matched by ``_int8_eligible`` (role ``"count"``, ndim 1) and
+excluded from ``second_moment_bytes``, so the budgeted footprint stays
+byte-identical to a static run at the same capacity.
 """
 from __future__ import annotations
 

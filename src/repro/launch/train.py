@@ -25,6 +25,14 @@ def main() -> None:
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--lr", type=float, default=3e-3)
     p.add_argument("--rank", type=int, default=64)
+    p.add_argument("--rank-budget", default=None, metavar="SPEC",
+                   help="sketch-rank budget (sketchy only; core/sketchy."
+                        "RankBudget): comma-separated key=value pairs from "
+                        "total,min_k,max_k,every,policy — e.g. "
+                        "'total=2048,min_k=8,max_k=128,policy=rho_greedy'. "
+                        "Memory stays at max_k capacity while active rank "
+                        "migrates to high-rho blocks; omitted keys use the "
+                        "RankBudget defaults and --rank is ignored")
     p.add_argument("--update-every", type=int, default=10)
     p.add_argument("--block-size", type=int, default=1024)
     p.add_argument("--kernel-backend", default="auto",
@@ -91,9 +99,23 @@ def main() -> None:
 
     cfg = registry.get_reduced(args.arch) if args.reduced \
         else registry.get_config(args.arch)
+    rank_budget = None
+    if args.rank_budget:
+        from repro.core.sketchy import RankBudget
+        fields = {"total": int, "min_k": int, "max_k": int, "every": int,
+                  "policy": str}
+        kw = {}
+        for tok in args.rank_budget.split(","):
+            k, _, v = tok.partition("=")
+            k = k.strip()
+            if k not in fields:
+                p.error(f"--rank-budget: unknown key {k!r}; "
+                        f"have {sorted(fields)}")
+            kw["realloc_every" if k == "every" else k] = fields[k](v.strip())
+        rank_budget = RankBudget(**kw)
     opt_cfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
-        rank=args.rank, block_size=args.block_size,
+        rank=args.rank, rank_budget=rank_budget, block_size=args.block_size,
         update_every=args.update_every, weight_decay=1e-4,
         kernel_backend=args.kernel_backend,
         refresh_schedule=args.refresh_schedule,

@@ -33,6 +33,12 @@ reproducible), and an int8 checkpoint restores into an fp32/bf16 run by
 dequantizing ``values * scale``.  Same-structure dtype changes (fp32 <->
 bf16) are a plain cast in the main restore path, which also reinterprets
 bfloat16 leaves that ``np.load`` hands back as raw void (``|V2``) arrays.
+
+Fixed-rank migration: checkpoints written before the rank-budget allocator
+(core/sketchy.RankBudget) carry no per-block active-rank vectors
+(``...::.k::.value``).  Restoring one into a budgeted template fills those
+vectors from the template's init-time uniform allocation; the allocator's
+next reallocation then re-fits the budget to the restored spectra.
 """
 from __future__ import annotations
 
@@ -175,6 +181,11 @@ _POOL_LEAF = re.compile(r"^(.*)\.pools::(\d+x\d+)::(.+)$")
 _QP_VALUES = "::.values::.value"
 _QP_SCALE = "::.scale::.value"
 _TAGGED = "::.value"
+# Per-block active-rank vector of the rank-budget allocator
+# (core/sketchy.BudgetedSketchStats.k).  Fixed-rank checkpoints predate it;
+# the migration shims fill it from the template's init-time uniform
+# allocation instead of failing the restore.
+_ACTIVE_RANK = "::.k::.value"
 
 
 def _migrate_pre_pool(path: str, manifest: dict, named: list,
@@ -360,6 +371,11 @@ def _migrate_quantized(path: str, manifest: dict, named: list,
                 consumed.update((vrec["name"], srec["name"]))
                 leaves.append(_cast_to_template(dequant_cache[base], tmpl))
                 continue
+        if name.endswith(_ACTIVE_RANK) and (meta or {}).get("role") == "count":
+            # dtype change combined with a fixed-rank (pre-budget)
+            # checkpoint: keep the template's init-time allocation
+            leaves.append(np.asarray(jax.device_get(tmpl)))
+            continue
         raise ValueError(
             f"quantized-state migration: template leaf {name!r} has no "
             "source in the checkpoint (neither an exact match nor a "
@@ -370,6 +386,52 @@ def _migrate_quantized(path: str, manifest: dict, named: list,
             f"quantized-state migration: {len(leftover)} checkpoint leaves "
             f"were not consumed (e.g. {sorted(leftover)[:3]}) — "
             "incompatible states")
+    return leaves
+
+
+def _migrate_fixed_rank(path: str, manifest: dict, named: list,
+                        metas: list) -> Optional[list]:
+    """Restore a fixed-rank (pre-rank-budget) checkpoint into a budgeted
+    template.  Such checkpoints carry no per-block active-rank vectors
+    (``<base>::.k::.value``, role ``"count"``); every other template leaf
+    must match the checkpoint exactly (with the usual fp32<->bf16 cast).
+    The missing k leaves keep their template values — the init-time uniform
+    allocation — and the allocator's next reallocation re-fits them to the
+    restored spectra.  Returns arrays aligned with the template flatten
+    order, or ``None`` when no k leaf is missing.
+    """
+    recs = {r["name"]: r for r in manifest["leaves"]}
+    if not any(n not in recs and n.endswith(_ACTIVE_RANK)
+               and (m or {}).get("role") == "count"
+               for (n, _), m in zip(named, metas)):
+        return None
+
+    consumed: set = set()
+    leaves = []
+    for (name, tmpl), meta in zip(named, metas):
+        if name not in recs and name.endswith(_ACTIVE_RANK) \
+                and (meta or {}).get("role") == "count":
+            leaves.append(np.asarray(jax.device_get(tmpl)))
+            continue
+        rec = recs.get(name)
+        if rec is None:
+            raise ValueError(
+                f"fixed-rank migration: template leaf {name!r} missing from "
+                "checkpoint")
+        rec_meta = rec.get("meta")
+        if meta is not None and rec_meta is not None \
+                and rec_meta["role"] != meta["role"]:
+            raise ValueError(
+                f"state-role mismatch at {name}: checkpoint has "
+                f"{rec_meta['role']!r}, template expects {meta['role']!r}")
+        consumed.add(name)
+        leaves.append(_cast_to_template(_load_rec(path, rec), tmpl))
+    leftover = set(recs) - consumed
+    if leftover:
+        raise ValueError(
+            f"fixed-rank migration: {len(leftover)} checkpoint leaves were "
+            f"not consumed (e.g. {sorted(leftover)[:3]}) — incompatible "
+            "states")
     return leaves
 
 
@@ -416,6 +478,8 @@ def restore(directory: str, template: PyTree, *, step: Optional[int] = None,
         migrated = _migrate_pre_pool(path, manifest, named, metas)
         if migrated is None:
             migrated = _migrate_quantized(path, manifest, named, metas)
+        if migrated is None:
+            migrated = _migrate_fixed_rank(path, manifest, named, metas)
         if migrated is not None:
             return assemble(migrated)
     if len(named) != len(manifest["leaves"]):

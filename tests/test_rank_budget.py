@@ -1,0 +1,310 @@
+"""Rank-budget allocator (core/sketchy.RankBudget): static-policy parity
+with the pre-budget engine, budget conservation, exact Robust-FD mass
+folding on shrink, rho-greedy migration, checkpoint migration, and the
+deprecated ``rank=`` alias."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic sampling shim
+    from hypothesis_compat import given, settings, strategies as st
+
+from repro.core import api
+from repro.core.fd import FDState, fd_resize_batched
+from repro.core.pool import allocate_ranks, uniform_ranks
+from repro.core.sketchy import (BudgetedSketchStats, RankBudget,
+                                SketchyConfig, sketchy)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _params():
+    return {"w": jnp.zeros((32, 32), jnp.float32),
+            "v": jnp.zeros((16, 8), jnp.float32)}
+
+
+def _grads(i, params):
+    key = jax.random.PRNGKey(1000 + i)
+    keys = jax.random.split(key, len(params))
+    return {name: jax.random.normal(k, p.shape, p.dtype)
+            for k, (name, p) in zip(keys, sorted(params.items()))}
+
+
+def _run(tx, params, steps):
+    state = tx.init(params)
+    outs = []
+    for i in range(steps):
+        u, state = tx.update(_grads(i, params), state, params)
+        outs.append(u)
+    return outs, state
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# static policy == pre-budget engine, across the whole engine matrix
+
+
+@pytest.mark.parametrize("schedule", ["synchronized", "staggered"])
+@pytest.mark.parametrize("mode", ["inline", "async"])
+@pytest.mark.parametrize("dtype", ["fp32", "bf16", "int8"])
+def test_static_policy_bitwise_parity(schedule, mode, dtype):
+    """RankBudget(min_k=max_k=r, policy="static") is bitwise-identical to
+    the deprecated ``rank=r`` spelling under every refresh_schedule x
+    refresh_mode x second_moment_dtype combination."""
+    params = _params()
+    common = dict(block_size=16, beta2=0.99, update_every=2,
+                  refresh_schedule=schedule, refresh_mode=mode,
+                  second_moment_dtype=dtype)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tx_old = sketchy(SketchyConfig(rank=4, **common))
+    tx_new = sketchy(SketchyConfig(
+        rank_budget=RankBudget(min_k=4, max_k=4, policy="static"), **common))
+    outs_old, st_old = _run(tx_old, params, 7)
+    outs_new, st_new = _run(tx_new, params, 7)
+    _assert_trees_bitwise(outs_old, outs_new)
+    _assert_trees_bitwise(st_old, st_new)
+    assert api.second_moment_bytes(st_old) == api.second_moment_bytes(st_new)
+
+
+def test_budgeted_bytes_equal_static_at_same_capacity():
+    """rho_greedy at capacity max_k stores byte-identical second-moment
+    state to a static run at rank == max_k: k is a role="count" leaf, never
+    part of the Fig. 1 budget."""
+    params = _params()
+    common = dict(block_size=16, update_every=2)
+    tx_s = sketchy(SketchyConfig(
+        rank_budget=RankBudget(min_k=4, max_k=4), **common))
+    tx_b = sketchy(SketchyConfig(
+        rank_budget=RankBudget(min_k=2, max_k=4, policy="rho_greedy"),
+        **common))
+    _, st_s = _run(tx_s, params, 3)
+    _, st_b = _run(tx_b, params, 3)
+    assert api.second_moment_bytes(st_s) == api.second_moment_bytes(st_b)
+
+
+# ---------------------------------------------------------------------------
+# allocator properties
+
+
+def _ref_allocate(pressure, total, min_k, max_k):
+    """Plain-python greedy waterfill reference."""
+    n = len(pressure)
+    k = [min_k] * n
+    budget = total - n * min_k
+    for i in sorted(range(n), key=lambda i: -pressure[i]):
+        give = min(budget, max_k - min_k)
+        k[i] += give
+        budget -= give
+    return k
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 12), min_k=st.integers(1, 6), room=st.integers(0, 9),
+       slack=st.integers(0, 40), seed=st.integers(0, 10_000))
+def test_allocate_ranks_conserves_budget(n, min_k, room, slack, seed):
+    """For arbitrary pressure vectors: sum k_b == total exactly and every
+    block lands in [min_k, max_k]; matches the plain greedy reference."""
+    max_k = min_k + room
+    total = min(n * min_k + slack, n * max_k)
+    rng = np.random.default_rng(seed)
+    pressure = jnp.asarray(rng.random(n), jnp.float32)
+    k = np.asarray(allocate_ranks(pressure, total=total, min_k=min_k,
+                                  max_k=max_k))
+    assert int(k.sum()) == total
+    assert (k >= min_k).all() and (k <= max_k).all()
+    assert k.tolist() == _ref_allocate(pressure.tolist(), total, min_k, max_k)
+
+
+def test_uniform_ranks_spreads_remainder():
+    k = np.asarray(uniform_ranks(3, 8, 1, 4))
+    assert k.tolist() == [3, 3, 2] and k.sum() == 8
+
+
+def test_resolve_total_validates_feasibility():
+    b = RankBudget(total=100, min_k=2, max_k=8)
+    with pytest.raises(ValueError, match="infeasible"):
+        b.resolve_total(4)          # 100 > 4 * 8
+    assert b.resolve_total(20) == 100
+    assert RankBudget(min_k=2, max_k=8).resolve_total(5) == 40  # capacity
+
+
+# ---------------------------------------------------------------------------
+# exact Robust-FD mass folding
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 5),
+       ell=st.integers(2, 8))
+def test_resize_folds_exact_dropped_mass(seed, n, ell):
+    """Shrinking block b to k folds exactly sum_{i>=k} s_i into rho and
+    zeroes the dropped eigenpairs; growing only unmasks zero columns."""
+    rng = np.random.default_rng(seed)
+    d = ell + 3
+    s = np.sort(rng.random((n, ell)).astype(np.float32), axis=-1)[:, ::-1]
+    U = rng.normal(size=(n, d, ell)).astype(np.float32)
+    rho = rng.random(n).astype(np.float32)
+    state = FDState(eigvecs=jnp.asarray(U), eigvals=jnp.asarray(s.copy()),
+                    rho=jnp.asarray(rho))
+    new_k = jnp.asarray(rng.integers(1, ell + 1, size=n), jnp.int32)
+    out = fd_resize_batched(state, new_k)
+    for b in range(n):
+        k = int(new_k[b])
+        dropped = s[b, k:].sum()
+        np.testing.assert_allclose(float(out.rho[b]), rho[b] + dropped,
+                                   rtol=1e-6, atol=1e-7)
+        assert np.all(np.asarray(out.eigvals)[b, k:] == 0.0)
+        assert np.all(np.asarray(out.eigvecs)[b, :, k:] == 0.0)
+        np.testing.assert_array_equal(np.asarray(out.eigvals)[b, :k],
+                                      s[b, :k])
+        np.testing.assert_array_equal(np.asarray(out.eigvecs)[b, :, :k],
+                                      U[b, :, :k])
+    # growing back to capacity is a no-op on the already-masked state
+    regrow = fd_resize_batched(out, jnp.full((n,), ell, jnp.int32))
+    _assert_trees_bitwise(out, regrow)
+
+
+# ---------------------------------------------------------------------------
+# rho_greedy migration on a synthetic two-spectrum problem
+
+
+@pytest.mark.parametrize("dtype,mode", [("fp32", "inline"),
+                                        ("int8", "inline"),
+                                        ("fp32", "async")])
+def test_rho_greedy_shifts_rank_to_high_rho_block(dtype, mode):
+    """Two same-shape params, one fed full-spectrum noise (sketch starves,
+    high rho) and one rank-1 gradients (no escaped mass): the budget
+    migrates toward the noisy block while sum k_b stays at total."""
+    params = {"hi": jnp.zeros((32, 32), jnp.float32),
+              "lo": jnp.zeros((32, 32), jnp.float32)}
+    tx = sketchy(SketchyConfig(
+        rank_budget=RankBudget(total=16, min_k=2, max_k=14,
+                               policy="rho_greedy", realloc_every=1),
+        block_size=32, beta2=0.9, update_every=2,
+        second_moment_dtype=dtype, refresh_mode=mode))
+    state = tx.init(params)
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(jax.random.PRNGKey(7), (32,))
+    v = jax.random.normal(jax.random.PRNGKey(8), (32,))
+    for i in range(10):
+        key, sub = jax.random.split(key)
+        g = {"hi": jax.random.normal(sub, (32, 32)),
+             "lo": jnp.outer(u, v)}
+        _, state = tx.update(g, state, params)
+    alloc = api.rank_allocation(state)
+    (k,) = [np.asarray(grp["k"]) for grp in alloc["groups"].values()]
+    assert int(k.sum()) == 16 == alloc["total"]
+    k_hi, k_lo = int(k[0]), int(k[1])   # pack order: "hi" then "lo"
+    assert k_hi > k_lo, (k_hi, k_lo)
+    assert k_hi >= 10 and k_lo <= 6
+
+
+def test_rank_allocation_reports_shares():
+    params = _params()
+    tx = sketchy(SketchyConfig(
+        rank_budget=RankBudget(min_k=2, max_k=6, policy="rho_greedy"),
+        block_size=16, update_every=2))
+    _, state = _run(tx, params, 3)
+    alloc = api.rank_allocation(state)
+    shares = np.concatenate([np.asarray(grp["budget_share"]) for grp in
+                             alloc["groups"].values()])
+    ks = np.concatenate([np.asarray(grp["k"]) for grp in
+                         alloc["groups"].values()])
+    assert int(ks.sum()) == alloc["total"]
+    np.testing.assert_allclose(shares.sum(), 1.0, rtol=1e-6)
+    for grp in alloc["groups"].values():
+        assert np.asarray(grp["rho"]).shape == np.asarray(grp["k"]).shape
+
+
+# ---------------------------------------------------------------------------
+# checkpoint migration: fixed-rank checkpoints restore into budgeted runs
+
+
+def test_fixed_rank_checkpoint_restores_into_budgeted(tmp_path):
+    from repro.train import checkpoint as ck
+
+    params = _params()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tx_old = sketchy(SketchyConfig(rank=4, block_size=16, update_every=2))
+    _, st_old = _run(tx_old, params, 4)
+    ck.save(str(tmp_path), 4, st_old)
+
+    tx_new = sketchy(SketchyConfig(
+        rank_budget=RankBudget(min_k=2, max_k=6, policy="rho_greedy",
+                               realloc_every=1),
+        block_size=16, update_every=2))
+    template = tx_new.init(params)
+    restored, step, _ = ck.restore(str(tmp_path), template)
+    assert step == 4
+    # k leaves fell back to the template's init-time uniform allocation
+    alloc = api.rank_allocation(restored)
+    ks = np.concatenate([np.asarray(g["k"]) for g in
+                         alloc["groups"].values()])
+    assert int(ks.sum()) == alloc["total"]
+    # and the run continues (realloc re-fits the budget to restored spectra)
+    state = restored
+    for i in range(4, 8):
+        _, state = tx_new.update(_grads(i, params), state, params)
+    alloc2 = api.rank_allocation(state)
+    ks2 = np.concatenate([np.asarray(g["k"]) for g in
+                          alloc2["groups"].values()])
+    assert int(ks2.sum()) == alloc["total"]
+
+    # same-structure restore stays exact
+    r2, _, _ = ck.restore(str(tmp_path), tx_old.init(params))
+    _assert_trees_bitwise(st_old, r2)
+
+
+# ---------------------------------------------------------------------------
+# API surface: deprecation alias, validation, hyperparam rejection
+
+
+def test_rank_alias_deprecated_but_equivalent():
+    with pytest.warns(DeprecationWarning, match="rank_budget"):
+        cfg = SketchyConfig(rank=8)
+    assert cfg.rank == 8
+    assert cfg.rank_budget == RankBudget(min_k=8, max_k=8, policy="static")
+    # no warning when rank_budget is passed explicitly
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = SketchyConfig(rank_budget=RankBudget(min_k=8, max_k=8))
+        assert cfg2.rank == 8           # normalized legacy read
+        # dataclasses.replace round-trips the normalized pair
+        cfg3 = dataclasses.replace(cfg2, update_every=5)
+        assert cfg3.rank_budget == cfg2.rank_budget
+        SketchyConfig()                  # default: paper rank 256, static
+    with pytest.raises(ValueError, match="not both"):
+        SketchyConfig(rank=8, rank_budget=RankBudget(min_k=4, max_k=4))
+
+
+def test_rank_budget_validation():
+    with pytest.raises(ValueError, match="policy"):
+        RankBudget(policy="bogus")
+    with pytest.raises(ValueError, match="min_k"):
+        RankBudget(min_k=8, max_k=4)
+    with pytest.raises(ValueError, match="realloc_every"):
+        RankBudget(realloc_every=0)
+
+
+def test_set_hyperparams_rejects_unknown_key():
+    from repro.core.factory import OptimizerConfig, make_optimizer
+    tx = make_optimizer(OptimizerConfig(rank=4, block_size=16,
+                                        update_every=2, total_steps=10))
+    state = tx.init(_params())
+    with pytest.raises(KeyError, match="unknown hyperparameter 'bogus'"):
+        api.set_hyperparams(state, bogus=1.0)
+    # known keys still go through
+    state2 = api.set_hyperparams(state, beta2=0.95)
+    assert float(api.get_hyperparams(state2)["beta2"]) == pytest.approx(0.95)
