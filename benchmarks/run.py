@@ -34,6 +34,12 @@ writes the same rows as a machine-readable JSON list for trajectory files):
   opt_step_time_sharded_stats  engine step under stats_reduction="sharded"
                            on an 8-device host-platform mesh (subprocess:
                            the bench process itself must keep ONE device)
+  serve_latency_{constant,step}_traffic  p50/p99 inter-token latency of the
+                           continuous-batching engine under load-generator
+                           traffic (serve/loadgen.py shapes)
+  monitor_overhead_per_window  FD gradient-monitor cost per feedback window
+                           (serve/monitor.py: window x fd_update + the
+                           window-boundary signal reads)
 """
 from __future__ import annotations
 
@@ -670,6 +676,72 @@ print(f"SHARDED_US={{us_s:.1f}} REPL_US={{us_r:.1f}}")
          f"4x(64x64) leaves rank=16 update_every=2")
 
 
+def bench_serve_latency(ticks: int = 16) -> None:
+    """Serve rows (ISSUE 10): the continuous-batching engine driven by the
+    deterministic load generator, one row per traffic shape.  ``us_per_call``
+    is mean wall time per engine step; the derived column carries p50/p99
+    inter-token latency read off the request handles' per-token timestamps —
+    the step shape's post-jump p99 is the number the slot-reuse redesign is
+    about (queued requests claim freed lanes instead of waiting for the
+    whole static batch)."""
+    from repro.configs.registry import get_reduced
+    from repro.models import model as model_lib
+    from repro.serve import (Engine, LoadGenerator, ServeConfig,
+                             TrafficConfig)
+
+    cfg = get_reduced("paper_lm_100m")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    for shape in ("constant", "step"):
+        gen = LoadGenerator(TrafficConfig(
+            shape=shape, rate=1.0, ticks=ticks, step_at=ticks // 2,
+            step_mult=3.0, prompt_len=6, new_tokens=6), cfg.vocab_size)
+        eng = Engine(cfg, params, ServeConfig(batch=4, max_seq=32))
+        eng.step()   # pay the decode compile outside the timed run
+        handles = []
+        t0 = time.perf_counter()
+        for tick in range(ticks):
+            for req in gen.arrivals(tick):
+                handles.append(eng.submit(req))
+            eng.step()
+        done = eng.drain()
+        wall = time.perf_counter() - t0
+        steps = eng.step_count - 1
+        lat = np.array([t1 - ta for h in handles for ta, t1 in
+                        zip(h.token_times, h.token_times[1:])])
+        p50 = np.percentile(lat, 50) * 1e3 if lat.size else 0.0
+        p99 = np.percentile(lat, 99) * 1e3 if lat.size else 0.0
+        _row(f"serve_latency_{shape}_traffic", wall * 1e6 / max(steps, 1),
+             f"p50={p50:.2f}ms p99={p99:.2f}ms tokens="
+             f"{sum(len(h.tokens) for h in handles)} requests={len(handles)} "
+             f"steps={steps} batch=4")
+
+
+def bench_monitor_overhead_per_window(d: int = 4096, windows: int = 20) -> None:
+    """Serve-time telemetry cost (ISSUE 10): one full monitor window —
+    ``window`` jitted rank-ell fd_updates on a (d,) gradient plus the
+    boundary signal reads (leading eig, pressure, drift angle, policy) —
+    on the flattened-head gradient size the adaptation loop actually
+    monitors."""
+    from repro.serve import GradientMonitor, MonitorConfig
+
+    cfg = MonitorConfig(ell=8, window=8, top_k=4)
+    mon = GradientMonitor(d, cfg)
+    rng = np.random.default_rng(0)
+    grads = [rng.standard_normal(d).astype(np.float32)
+             for _ in range(cfg.window)]
+    for g in grads:     # compile + first boundary
+        mon.observe(g)
+    t0 = time.perf_counter()
+    for _ in range(windows):
+        for g in grads:
+            mon.observe(g)
+    us = (time.perf_counter() - t0) * 1e6 / windows
+    per_grad = us / cfg.window
+    _row("monitor_overhead_per_window", us,
+         f"per_grad={per_grad:.1f}us d={d} ell={cfg.ell} "
+         f"window={cfg.window} (fd_update stream + boundary signals)")
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--json", metavar="PATH", default=None,
@@ -692,6 +764,8 @@ def main(argv=None) -> None:
     bench_lm_step_time_refresh_schedule()
     bench_bytes_on_wire_per_refresh()
     bench_opt_step_time_sharded_stats()
+    bench_serve_latency()
+    bench_monitor_overhead_per_window()
 
     if args.json:
         with open(args.json, "w") as f:

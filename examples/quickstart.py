@@ -151,6 +151,35 @@ wall-clock step time; none of them changes the statistics stream:
 outputs, so even the async pending slot adds no steady-state copies beyond
 its double buffer.  Keep references out of donated trees (pass
 ``donate=False`` if you must reuse an old state).
+
+Serving + online adaptation
+---------------------------
+The serving surface (``src/repro/serve/``) is a session-style
+continuous-batching engine plus the paper's FD machinery re-used as
+serve-time telemetry and an online learner:
+
+  * ``Engine.submit(Request) -> handle`` / ``Engine.step()`` /
+    ``Engine.drain()`` — each batch lane decodes at its own sequence
+    position; a short request frees its lane the step it finishes and the
+    next queued request prefills into the wiped slot.  Per-request
+    ``max_new_tokens`` and ``temperature`` are honored per lane.  (The old
+    one-shot ``Engine.generate`` survives as a deprecated wrapper — see
+    the CHANGES.md migration table.)
+  * ``GradientMonitor`` (serve/monitor.py) — a per-window FD sketch of the
+    live feedback gradients; at each window boundary it reads the leading
+    eigenvalue, the escaped-mass pressure ``rho/(trace+rho)``, and the
+    drift angle vs the previous window's sketch subspace, then decides
+    steady / adapt / pause (pause = suspected bad traffic).
+  * ``OnlineAdapter`` (serve/adapt.py) — the S-AdaGrad OCO step over the
+    flattened head, built through ``inject_hyperparams`` so
+    ``adapter.set_hyperparams(learning_rate=..., beta2=...)`` mutates the
+    live values with no retrace.
+
+Driven end-to-end by ``python -m repro.launch.serve --traffic ... --adapt
+... --monitor ...`` (deterministic constant/step load shapes from
+serve/loadgen.py; the ``serve_latency_*`` benchmark rows come from the
+same loop).  ``main()`` below runs a small submit/step/drain session and
+one monitored adaptation window.
 """
 import collections
 
@@ -228,6 +257,37 @@ def main():
         params, opt_state, m = step(params, opt_state, batch)
         if t % 10 == 0 or t == 49:
             print(f"step {t:3d}  loss {float(m['loss']):.4f}")
+
+    # --- serving + online adaptation (serve/) ------------------------------
+    import numpy as np
+
+    from repro.serve import (AdaptConfig, Engine, GradientMonitor,
+                             MonitorConfig, OnlineAdapter, Request,
+                             ServeConfig)
+
+    engine = Engine(cfg, params, ServeConfig(batch=2, max_seq=32))
+    rng = np.random.default_rng(0)
+    handles = [engine.submit(Request(
+        prompt=rng.integers(0, cfg.vocab_size, size=(6,), dtype=np.int32),
+        max_new_tokens=n)) for n in (4, 7, 5)]   # 3 requests, 2 lanes
+    engine.drain()                               # slot reuse serves all 3
+    for h in handles:
+        print(f"served request {h.id}: {len(h.tokens)} tokens "
+              f"(lane claimed at step {h.start_step})")
+
+    # feedback batches -> FD monitor -> S-AdaGrad head adaptation
+    adapter = OnlineAdapter(cfg, params, AdaptConfig(lr=0.1, beta2=0.95))
+    monitor = GradientMonitor(adapter.d, MonitorConfig(window=3, top_k=3))
+    for t in range(3):
+        fb = {k: jnp.asarray(v) for k, v in data.batch(100 + t).items()}
+        loss, g = adapter.grad(params, fb)
+        reading = monitor.observe(g)             # closes the window at t=2
+    print("monitor:", reading)
+    params, loss = adapter.step(params, fb)
+    engine.params = params                       # serve the adapted head
+    adapter.set_hyperparams(learning_rate=0.02)  # runtime knob, no retrace
+    print(f"adapted head, feedback loss {float(loss):.4f}, "
+          f"lr -> {adapter.hyperparams['learning_rate']:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,14 @@
-"""Batched serving example: prefill + greedy decode with KV cache.
+"""Serving example: continuous-batching greedy decode with KV cache.
 
     PYTHONPATH=src python examples/serve_decode.py
+
+Runs the one-shot submit/drain demo of ``repro.launch.serve``.  Extra args
+pass through — e.g. add load-generator traffic with FD monitoring and
+online adaptation:
+
+    PYTHONPATH=src python examples/serve_decode.py \\
+        --traffic shape=step,rate=1,ticks=16,step_at=8 \\
+        --monitor window=4 --adapt lr=0.1
 """
 import sys
 

@@ -10,9 +10,10 @@ Compares a fresh ``benchmarks/run.py --json`` output against the committed
   * ``bytes_on_wire_per_refresh`` — the distributed-FD merge wire cost
     (sketch_merge.pack_wire structures); byte-exact like the memory rows,
     ANY increase is a regression.
-  * ``opt_step_time_*`` — wall-time rows.  Gated on ``us_per_call`` with a
-    multiplicative tolerance (default 1.75x) because shared CI runners are
-    noisy; tighten locally with ``--time-tolerance``.
+  * ``opt_step_time_*``, ``serve_latency_*``, ``monitor_overhead_*`` —
+    wall-time rows.  Gated on ``us_per_call`` with a multiplicative
+    tolerance (default 1.75x) because shared CI runners are noisy; tighten
+    locally with ``--time-tolerance``.
   * ``opt_overhead_vs_adam`` — the sketchy/adam step-cost ratio parsed from
     ``ratio=<x>x`` in the derived column.  Unitless, so runner speed cancels
     out; gated with the same multiplicative tolerance as the time rows.
@@ -102,7 +103,8 @@ def main(argv=None) -> int:
                 failures.append(
                     f"{name}: sketchy/adam ratio regressed {br:.2f}x -> "
                     f"{fr:.2f}x (> {args.time_tolerance}x tolerance)")
-        elif name.startswith("opt_step_time") and gate_time:
+        elif name.startswith(("opt_step_time", "serve_latency",
+                              "monitor_overhead")) and gate_time:
             ratio = f["us_per_call"] / max(b["us_per_call"], 1e-9)
             if ratio > args.time_tolerance:
                 failures.append(

@@ -28,6 +28,13 @@
 #                                             properties, rho_greedy
 #                                             migration, and checkpoint
 #                                             migration
+#   scripts/check.sh serve [extra args]       serving stack: continuous-
+#                                             batching parity vs the old
+#                                             static path, slot reuse, FD
+#                                             gradient monitor policy,
+#                                             set_hyperparams no-retrace,
+#                                             and the e2e shift-adapt
+#                                             scenario
 # Extra pytest args reach EVERY pytest invocation of the chosen tier,
 # including the kernels tier that the full tier runs first.
 # All tiers run a compileall syntax gate first so breakage surfaces before
@@ -122,6 +129,24 @@ budget_tier() {
 if [[ "${1:-}" == "budget" ]]; then
   shift
   budget_tier "$@"
+  exit 0
+fi
+
+serve_tier() {
+  # parity FIRST: the session API must reproduce the old static-batch
+  # greedy tokens across cache families before the telemetry/adaptation
+  # tests run — a decode regression fails the tier immediately
+  python -m pytest -x -q \
+    "tests/test_serve.py::test_continuous_batching_matches_static_batch" \
+    "$@"
+  python -m pytest -x -q tests/test_serve.py \
+    --deselect tests/test_serve.py::test_continuous_batching_matches_static_batch \
+    "$@"
+}
+
+if [[ "${1:-}" == "serve" ]]; then
+  shift
+  serve_tier "$@"
   exit 0
 fi
 

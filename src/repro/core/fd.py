@@ -401,6 +401,55 @@ def fd_merge(a: FDState, b: FDState, kernels=None) -> FDState:
     return FDState(*(x[0] for x in out))
 
 
+def fd_pressure(state: FDState) -> jnp.ndarray:
+    """Escaped-mass ratio ``rho / (trace + rho)`` in [0, 1].
+
+    The sketch's own estimate of how much of the stream it is failing to
+    capture: near 0 the leading-``ell`` subspace holds the stream, near 1
+    the mass escapes past the sketch rank.  This is the drift-pressure
+    signal shared by the rank-budget allocator (``rho_greedy`` pouring) and
+    the serve-time gradient monitor (serve/monitor.py).  Batch-polymorphic:
+    pooled states (eigvals (N, ell), rho (N,)) return an (N,) vector.
+    """
+    trace = jnp.sum(state.eigvals.astype(jnp.float32), axis=-1)
+    rho = state.rho.astype(jnp.float32)
+    return rho / jnp.maximum(trace + rho, 1e-30)
+
+
+def fd_leading_eigval(state: FDState, *, compensated: bool = True
+                      ) -> jnp.ndarray:
+    """Top eigenvalue of the sketched covariance.  With ``compensated``
+    (default) this is the top eigenvalue of the rho-compensated estimate
+    ``U diag(s) U^T + rho I`` — i.e. ``s[0] + rho`` — matching what the
+    preconditioner actually applies; without, the raw deflated ladder top.
+    Batch-polymorphic like ``fd_pressure``."""
+    top = state.eigvals[..., 0].astype(jnp.float32)
+    if compensated:
+        top = top + state.rho.astype(jnp.float32)
+    return top
+
+
+def fd_subspace_angle(a, b, k: int = None) -> jnp.ndarray:
+    """Largest principal angle (radians) between the leading-``k`` sketch
+    subspaces of ``a`` and ``b`` (FDState or raw (d, ell) eigvec arrays).
+
+    ``arccos(sigma_min(Ua^T Ub))``: 0 when the subspaces coincide, pi/2 when
+    some direction of one is orthogonal to all of the other.  ``k`` defaults
+    to ``ell - 1`` (the deflation invariant keeps the last ladder column
+    zero, which would read as a spurious right angle).  A column that is
+    still zero (un-warmed sketch, low-rank window) saturates the angle at
+    pi/2 — callers should compare sketches that have both seen data.
+    """
+    Ua = a.eigvecs if isinstance(a, FDState) else a
+    Ub = b.eigvecs if isinstance(b, FDState) else b
+    if k is None:
+        k = max(Ua.shape[-1] - 1, 1)
+    k = min(k, Ua.shape[-1], Ub.shape[-1])
+    C = Ua[..., :k].astype(jnp.float32).T @ Ub[..., :k].astype(jnp.float32)
+    sv = jnp.linalg.svd(C, compute_uv=False)
+    return jnp.arccos(jnp.clip(jnp.min(sv, axis=-1), 0.0, 1.0))
+
+
 def fd_covariance(state: FDState, include_rho: bool = False) -> jnp.ndarray:
     """Materialize the sketched covariance (testing/analysis only)."""
     U, s, rho = state

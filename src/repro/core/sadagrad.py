@@ -25,8 +25,13 @@ from repro.core.fd import FDState, fd_apply_inverse_root, fd_init, fd_update
 @dataclasses.dataclass(frozen=True)
 class SAdaGradPreconditioner:
     """Alg. 2: FD-sketch the gradient stream, compensate with rho_{1:t} I,
-    precondition by the -1/2 root.  ``ell`` is used only at init."""
+    precondition by the -1/2 root.  ``ell`` is used only at init; ``beta2``
+    is the FD EMA decay (paper Obs. 6) — 1.0 is the unweighted regret
+    setting, < 1 forgets old mass, which is what the serve-time adaptation
+    loop wants under distribution drift (serve/adapt.py).  It may be a
+    traced scalar (injected hyperparameter): it only enters arithmetic."""
     ell: int = 0
+    beta2: Any = 1.0
 
     diagonal: ClassVar[bool] = False
 
@@ -39,16 +44,16 @@ class SAdaGradPreconditioner:
         return state
 
     def refresh(self, state, G, *, count):
-        return fd_update(state, G, beta2=1.0)
+        return fd_update(state, G, beta2=self.beta2)
 
     def precondition(self, state, G, *, count):
         return fd_apply_inverse_root(state, G, exponent=-0.5, eps=0.0)
 
 
-def sadagrad(ell: int) -> "api.GradientTransformation":
+def sadagrad(ell: int, beta2=1.0) -> "api.GradientTransformation":
     """S-AdaGrad as a composable direction transform on the shared engine."""
     return api.scale_by_preconditioner(
-        SAdaGradPreconditioner(ell),
+        SAdaGradPreconditioner(ell, beta2),
         api.EngineConfig(block_size=1 << 30, beta2=1.0, update_every=1,
                          graft="none", treat_vectors_as_columns=True))
 

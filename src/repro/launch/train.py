@@ -102,17 +102,11 @@ def main() -> None:
     rank_budget = None
     if args.rank_budget:
         from repro.core.sketchy import RankBudget
-        fields = {"total": int, "min_k": int, "max_k": int, "every": int,
-                  "policy": str}
-        kw = {}
-        for tok in args.rank_budget.split(","):
-            k, _, v = tok.partition("=")
-            k = k.strip()
-            if k not in fields:
-                p.error(f"--rank-budget: unknown key {k!r}; "
-                        f"have {sorted(fields)}")
-            kw["realloc_every" if k == "every" else k] = fields[k](v.strip())
-        rank_budget = RankBudget(**kw)
+        from repro.launch.flags import parse_kv_spec
+        rank_budget = parse_kv_spec(
+            args.rank_budget, RankBudget,
+            aliases={"every": "realloc_every"},
+            error=lambda m: p.error(f"--rank-budget: {m}"))
     opt_cfg = OptimizerConfig(
         name=args.optimizer, learning_rate=args.lr, total_steps=args.steps,
         rank=args.rank, rank_budget=rank_budget, block_size=args.block_size,

@@ -84,6 +84,10 @@ def _attend_math(q_chunk, k, v, q_start, kv_len=None,
                  logits_dtype=jnp.float32):
     """Pure attention math for one q chunk (no sharding annotations).
 
+    ``q_start``/``kv_len`` are scalars for the aligned train/prefill path,
+    or (B,) vectors for continuous-batching decode where every lane sits at
+    its own position (serve/engine.py slot reuse).
+
     ``logits_dtype`` controls the MATERIALIZED logits dtype (HBM traffic in
     the jnp fallback); the row max is always tracked in f32 and subtracted
     before the cast, so bf16 only quantizes already-centered values."""
@@ -92,12 +96,19 @@ def _attend_math(q_chunk, k, v, q_start, kv_len=None,
     scale = hd ** -0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", q_chunk.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
-    q_pos = q_start + jnp.arange(cq)
     k_pos = jnp.arange(S)
-    mask = q_pos[:, None] >= k_pos[None, :]
-    if kv_len is not None:
-        mask = mask & (k_pos[None, :] < kv_len)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if jnp.ndim(q_start):                       # per-lane decode positions
+        q_pos = q_start[:, None] + jnp.arange(cq)          # (B, cq)
+        mask = q_pos[:, :, None] >= k_pos[None, None, :]   # (B, cq, S)
+        if kv_len is not None:
+            mask = mask & (k_pos[None, None, :] < kv_len[:, None, None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        q_pos = q_start + jnp.arange(cq)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if kv_len is not None:
+            mask = mask & (k_pos[None, :] < kv_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     if logits_dtype != jnp.float32:
         m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
         s = (s - m).astype(logits_dtype)
@@ -197,16 +208,31 @@ def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray, pos
                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One-token decode. x: (B, 1, D); cache_k/v: (B, Smax, KV, hd);
-    pos: scalar current position. Returns (out, new_k, new_v)."""
+    pos: scalar current position shared by all lanes (static batch), or a
+    (B,) vector of per-lane positions (continuous batching: each lane's
+    cache write, RoPE phase, and causal mask follow its own position).
+    Returns (out, new_k, new_v)."""
     B, _, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, jnp.int32) if not cfg.mrope else \
-        jnp.full((3, B, 1), pos, jnp.int32)
+    per_lane = jnp.ndim(pos) == 1
+    if per_lane:
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = pos[:, None] if not cfg.mrope else \
+            jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32) if not cfg.mrope else \
+            jnp.full((3, B, 1), pos, jnp.int32)
     q, k, v = _project_qkv(cfg, p, x, positions)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    if per_lane:
+        write = jax.vmap(
+            lambda c, u, pb: jax.lax.dynamic_update_slice(c, u, (pb, 0, 0)))
+        cache_k = write(cache_k, k.astype(cache_k.dtype), pos)
+        cache_v = write(cache_v, v.astype(cache_v.dtype), pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     qg = q.reshape(B, 1, KV, H // KV, hd)
     out = _chunk_attend(qg, cache_k, cache_v, pos, kv_len=pos + 1,
                         logits_dtype=cfg.attn_logits_dtype)

@@ -57,6 +57,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
     return {k: mk(k, s) for k, s in cache_shapes(cfg, batch, max_seq).items()}
 
 
+def reset_lanes(cache: PyTree, lane_mask: jnp.ndarray) -> PyTree:
+    """Zero the cache contents of the lanes marked in ``lane_mask`` ((B,)
+    bool) — the slot-reuse primitive: a freed batch lane is wiped before a
+    queued request prefills into it.  Attention k/v beyond a lane's position
+    are already masked out, but the SSM/conv states are cumulative, so a
+    reused lane MUST be cleared.  Every cache layout keeps batch at axis 1
+    (stacked-over-layers), so one broadcast covers all families."""
+    def wipe(x):
+        m = lane_mask.reshape((1, -1) + (1,) * (x.ndim - 2))
+        return jnp.where(m, jnp.zeros((), x.dtype), x)
+
+    return jax.tree.map(wipe, cache)
+
+
 def cache_struct(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
     dt = _dtype(cfg)
     out = {}
@@ -71,7 +85,10 @@ def cache_struct(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
 def decode_step(cfg: ModelConfig, params, cache: PyTree, batch, pos, *,
                 unroll: bool = False):
     """One-token decode. batch: {'token': (B,1) / (B,1,K) / 'embed': (B,1,D)}.
-    pos: scalar int32 — current write position (cache holds [0, pos) tokens).
+    pos: scalar int32 — current write position (cache holds [0, pos) tokens)
+    shared by every lane, or a (B,) int32 vector of per-lane positions for
+    continuous batching (serve/engine.py: lanes decode at independent
+    depths; attention masks/writes follow each lane's own position).
     ``unroll=True`` replaces layer scans with Python loops (roofline probes).
     Returns (logits, new_cache)."""
     tok_batch = dict(batch)

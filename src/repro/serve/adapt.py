@@ -1,0 +1,123 @@
+"""Serve-time online adaptation: S-AdaGrad on the head from live feedback.
+
+Bridges the paper's OCO setting (Sec. 2 / Alg. 2) to serving: the model's
+head weights are treated as the online decision vector, each live-traffic
+feedback batch provides one loss/gradient, and the S-AdaGrad engine step
+(``core/sadagrad.sadagrad`` — FD sketch + rho compensation, ``beta2 < 1``
+forgetting under drift) updates the head between decode steps.
+
+The optimizer chain is built through ``api.inject_hyperparams``, so
+``set_hyperparams(learning_rate=..., beta2=...)`` mutates the live values in
+optimizer state — no chain rebuild, no retrace (the test suite pins the
+trace count).  The decision of *when* to step belongs to the caller, driven
+by serve/monitor.py's per-window policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, transform
+from repro.core.sadagrad import SAdaGradPreconditioner
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    lr: float = 0.1       # online learning rate (injected, runtime-mutable)
+    beta2: float = 0.99   # FD sketch EMA decay (injected, runtime-mutable)
+    ell: int = 8          # sketch rank over the flattened head
+
+
+def _pick_leaf(params) -> str:
+    # the adapted decision vector: the output head when untied, else the
+    # tied embedding matrix (which then IS the head)
+    return "lm_head" if "lm_head" in params else "embed"
+
+
+class OnlineAdapter:
+    """S-AdaGrad online learner over the flattened head leaf.
+
+    ``grad(params, batch)``  -> (loss, flat_grad)   — telemetry only (feeds
+                                                      serve/monitor.py)
+    ``step(params, batch)``  -> (new_params, loss)  — one OCO update
+    ``set_hyperparams(...)``                        — runtime lr/beta2
+    """
+
+    def __init__(self, cfg: ModelConfig, params, adapt: AdaptConfig = None):
+        self.cfg = cfg
+        self.adapt = adapt = adapt or AdaptConfig()
+        self._leaf = _pick_leaf(params)
+        self._shape = params[self._leaf].shape
+        self._dtype = params[self._leaf].dtype
+        self.d = int(jnp.size(params[self._leaf]))
+        self.trace_count = 0    # bumped inside the traced step body
+
+        def build(learning_rate, beta2):
+            # state structure is independent of the (possibly traced)
+            # hyperparameter values — the inject_hyperparams contract
+            return api.named_chain(
+                ("precond", api.scale_by_preconditioner(
+                    SAdaGradPreconditioner(adapt.ell, beta2),
+                    api.EngineConfig(block_size=1 << 30, beta2=1.0,
+                                     update_every=1, graft="none",
+                                     treat_vectors_as_columns=True))),
+                ("lr", transform.scale(-learning_rate)))
+
+        self._tx = api.inject_hyperparams(build)(
+            learning_rate=adapt.lr, beta2=adapt.beta2)
+        self.opt_state = self._tx.init(
+            jnp.zeros((self.d,), jnp.float32))
+
+        def loss_flat(w, params, batch):
+            p = dict(params)
+            p[self._leaf] = w.reshape(self._shape).astype(self._dtype)
+            return model_lib.loss_fn(cfg, p, batch)
+
+        def grad_fn(params, batch):
+            w = params[self._leaf].astype(jnp.float32).reshape(-1)
+            return jax.value_and_grad(loss_flat)(w, params, batch)
+
+        def step_fn(params, opt_state, batch):
+            self.trace_count += 1     # python side effect: counts retraces
+            w = params[self._leaf].astype(jnp.float32).reshape(-1)
+            loss, g = jax.value_and_grad(loss_flat)(w, params, batch)
+            update, opt_state = self._tx.update(g, opt_state)
+            new_leaf = (w + update).reshape(self._shape).astype(self._dtype)
+            return new_leaf, opt_state, loss, g
+
+        self._grad = jax.jit(grad_fn)
+        self._step = jax.jit(step_fn)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def grad(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Feedback loss and flattened head gradient, no update (the
+        monitor observes these even while adaptation is paused)."""
+        return self._grad(params, batch)
+
+    # -- the OCO step -------------------------------------------------------
+
+    def step(self, params, batch):
+        """One S-AdaGrad update on the head; returns (new_params, loss)."""
+        new_leaf, self.opt_state, loss, _ = self._step(
+            params, self.opt_state, batch)
+        new_params = dict(params)
+        new_params[self._leaf] = new_leaf
+        return new_params, loss
+
+    # -- runtime hyperparameters --------------------------------------------
+
+    def set_hyperparams(self, **overrides) -> None:
+        """Mutate lr/beta2 in optimizer state (api.set_hyperparams) — takes
+        effect next step with NO retrace; KeyError on unknown names."""
+        self.opt_state = api.set_hyperparams(self.opt_state, **overrides)
+
+    @property
+    def hyperparams(self) -> Dict[str, float]:
+        return {k: float(v)
+                for k, v in api.get_hyperparams(self.opt_state).items()}

@@ -1,15 +1,37 @@
-"""Batched decode serving engine (small-scale runnable; the 32k/500k decode
-configurations are exercised via the dry-run).
+"""Continuous-batching decode engine with slot reuse (session-style API).
 
-Prefill is executed through the decode path token-by-token in chunks of the
-request batch — adequate for the CPU example scale; on real hardware the
-prefill would lower ``forward`` + cache-write (see launch/dryrun.py's
-prefill cells for the compiled artifact).
+The serving surface is ``submit`` / ``step`` / ``drain``:
+
+    engine = Engine(cfg, params, ServeConfig(batch=4, max_seq=64))
+    h = engine.submit(Request(prompt, max_new_tokens=12))
+    while not h.done:
+        engine.step()
+    print(h.tokens)
+
+Each of the ``ServeConfig.batch`` lanes runs at its own sequence position
+(``models/cache.decode_step`` takes a (B,) position vector): a short request
+frees its lane the step it finishes and the next queued request prefills
+into the wiped slot (``cache_lib.reset_lanes``) while its co-tenants keep
+decoding — no padding to the longest request in flight.  Per-request
+``max_new_tokens`` and ``temperature`` are honored per lane (the old static
+path generated ``max(...)`` new tokens for everyone and applied request 0's
+temperature batch-wide).
+
+The legacy one-shot ``Engine.generate(List[Request]) -> List[Result]`` is
+kept as a thin deprecated wrapper over submit/drain (see the CHANGES.md
+migration table).
+
+Prefill is executed through the decode path token-by-token per lane —
+adequate for the CPU example scale; on real hardware the prefill would
+lower ``forward`` + cache-write (see launch/dryrun.py's prefill cells for
+the compiled artifact).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -17,8 +39,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import cache as cache_lib
-from repro.models import model as model_lib
 from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Engine-level serving knobs (the per-request knobs live on Request)."""
+    batch: int = 4        # number of batch lanes (requests decoding at once)
+    max_seq: int = 64     # per-lane cache capacity (prompt + generated)
+    seed: int = 0         # sampling PRNG seed
 
 
 @dataclasses.dataclass
@@ -33,53 +62,187 @@ class Result:
     tokens: List[int]
 
 
-class Engine:
-    """Static-batch engine: pads requests to a common grid and steps."""
+class RequestHandle:
+    """Ticket returned by ``Engine.submit``; filled in as the engine steps.
 
-    def __init__(self, cfg: ModelConfig, params, max_seq: int, batch: int):
+    ``tokens`` grows one entry per emitted token; ``token_times`` records a
+    wall-clock stamp per emission (the load-generator benchmark reads
+    inter-token latencies off these).  ``done`` flips when
+    ``max_new_tokens`` have been emitted and the lane is freed.
+    """
+
+    def __init__(self, rid: int, request: Request, submit_step: int):
+        self.id = rid
+        self.request = request
+        self.tokens: List[int] = []
+        self.token_times: List[float] = []
+        self.done = False
+        self.submit_step = submit_step      # engine step count at submit
+        self.start_step: Optional[int] = None   # lane assignment
+        self.finish_step: Optional[int] = None
+
+    @property
+    def result(self) -> Result:
+        return Result(tokens=list(self.tokens))
+
+    def __repr__(self):
+        state = "done" if self.done else \
+            ("active" if self.start_step is not None else "queued")
+        return (f"RequestHandle(id={self.id}, {state}, "
+                f"tokens={len(self.tokens)}/{self.request.max_new_tokens})")
+
+
+class Engine:
+    """Continuous-batching engine: per-lane positions, slot reuse, queueing."""
+
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig = None, *,
+                 max_seq: int = None, batch: int = None):
+        if not cfg.embed_inputs or cfg.num_codebooks:
+            raise ValueError(
+                f"serving supports token-input archs only; {cfg.name!r} has "
+                f"embed_inputs={cfg.embed_inputs} "
+                f"num_codebooks={cfg.num_codebooks}")
+        if serve is None:
+            serve = ServeConfig()
+        if max_seq is not None or batch is not None:   # legacy kw spelling
+            serve = dataclasses.replace(
+                serve, **({"max_seq": max_seq} if max_seq else {}),
+                **({"batch": batch} if batch else {}))
         self.cfg = cfg
         self.params = params
-        self.max_seq = max_seq
-        self.batch = batch
-        self._step = jax.jit(
-            lambda p, c, b, pos: cache_lib.decode_step(cfg, p, c, b, pos))
+        self.serve = serve
+        self.max_seq = serve.max_seq       # legacy attribute names
+        self.batch = serve.batch
+        B = serve.batch
+
+        self.cache = cache_lib.init_cache(cfg, B, serve.max_seq)
+        self.lane_pos = np.zeros((B,), np.int32)    # tokens cached per lane
+        self._fresh = np.zeros((B,), bool)          # wipe lane before step
+        self.lanes: List[Optional[RequestHandle]] = [None] * B
+        self.queue: Deque[RequestHandle] = collections.deque()
+        self.step_count = 0
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(serve.seed)
+
+        def _step(params, cache, tokens, pos, temps, fresh, key):
+            # tokens (B,1) int32; pos/temps/fresh (B,): one fused dispatch
+            # per engine step — lane wipe, decode, per-lane sampling
+            cache = cache_lib.reset_lanes(cache, fresh)
+            logits, cache = cache_lib.decode_step(
+                cfg, params, cache, {"token": tokens}, pos)
+            logits = logits[:, -1]                          # (B, V)
+            greedy = jnp.argmax(logits, axis=-1)
+            scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+            sampled = jax.random.categorical(key, scaled, axis=-1)
+            nxt = jnp.where(temps > 0, sampled, greedy)
+            return nxt, cache
+
+        self._step = jax.jit(_step)
+
+    # -- session API --------------------------------------------------------
+
+    def submit(self, request: Request) -> RequestHandle:
+        """Queue a request; it claims a batch lane as soon as one is free."""
+        P = len(request.prompt)
+        if request.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{request.max_new_tokens}")
+        if P < 1:
+            raise ValueError("empty prompt")
+        if P + request.max_new_tokens > self.serve.max_seq:
+            raise ValueError(
+                f"prompt ({P}) + max_new_tokens ({request.max_new_tokens}) "
+                f"exceeds max_seq={self.serve.max_seq}")
+        handle = RequestHandle(self._next_id, request, self.step_count)
+        self._next_id += 1
+        self.queue.append(handle)
+        self._fill_lanes()
+        return handle
+
+    def _fill_lanes(self) -> None:
+        for i in range(self.serve.batch):
+            if self.lanes[i] is None and self.queue:
+                h = self.queue.popleft()
+                self.lanes[i] = h
+                self.lane_pos[i] = 0
+                self._fresh[i] = True
+                h.start_step = self.step_count
+
+    @property
+    def active(self) -> int:
+        return sum(h is not None for h in self.lanes)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def step(self) -> List[RequestHandle]:
+        """Advance every active lane by one token; returns the handles that
+        completed this step (their lanes are freed for the queue)."""
+        self._fill_lanes()
+        if self.active == 0:
+            return []
+        B = self.serve.batch
+        tokens = np.zeros((B, 1), np.int32)
+        temps = np.zeros((B,), np.float32)
+        for i, h in enumerate(self.lanes):
+            if h is None:
+                continue
+            pos = int(self.lane_pos[i])
+            prompt = h.request.prompt
+            # the lane's sequence is prompt + generated; feed the token at
+            # the lane's current position
+            tokens[i, 0] = prompt[pos] if pos < len(prompt) \
+                else h.tokens[pos - len(prompt)]
+            temps[i] = h.request.temperature
+
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.lane_pos), jnp.asarray(temps),
+            jnp.asarray(self._fresh), sub)
+        nxt = np.asarray(nxt)
+        self._fresh[:] = False
+        self.step_count += 1
+
+        now = time.perf_counter()
+        completed: List[RequestHandle] = []
+        for i, h in enumerate(self.lanes):
+            if h is None:
+                continue
+            self.lane_pos[i] += 1
+            if self.lane_pos[i] >= len(h.request.prompt):
+                # the model's output at this position is a generated token
+                h.tokens.append(int(nxt[i]))
+                h.token_times.append(now)
+                if len(h.tokens) >= h.request.max_new_tokens:
+                    h.done = True
+                    h.finish_step = self.step_count
+                    self.lanes[i] = None        # slot reuse: free the lane
+                    completed.append(h)
+        return completed
+
+    def drain(self) -> List[RequestHandle]:
+        """Step until every queued and active request completes; returns the
+        completed handles in submission order."""
+        done: List[RequestHandle] = []
+        while self.queue or self.active:
+            done.extend(self.step())
+        return sorted(done, key=lambda h: h.id)
+
+    # -- legacy one-shot API (deprecated) -----------------------------------
 
     def generate(self, requests: List[Request], seed: int = 0) -> List[Result]:
-        cfg = self.cfg
-        assert len(requests) <= self.batch
-        B = self.batch
-        cache = cache_lib.init_cache(cfg, B, self.max_seq)
-        prompts = [r.prompt for r in requests]
-        max_p = max(len(p) for p in prompts)
-        max_new = max(r.max_new_tokens for r in requests)
-        toks = np.zeros((B, max_p), np.int32)
-        plens = np.zeros((B,), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p
-            plens[i] = len(p)
-
-        outs: List[List[int]] = [[] for _ in range(B)]
-        key = jax.random.PRNGKey(seed)
-        last = jnp.asarray(toks[:, :1])
-        for pos in range(max_p + max_new - 1):
-            batch = {"token": last}
-            logits, cache = self._step(self.params, cache,
-                                       batch, jnp.asarray(pos, jnp.int32))
-            logits = logits[:, -1]
-            key, sub = jax.random.split(key)
-            greedy = jnp.argmax(logits, axis=-1)
-            sampled = jax.random.categorical(sub, logits / max(
-                max(r.temperature for r in requests), 1e-6), axis=-1)
-            temp = max(r.temperature for r in requests)
-            nxt = np.asarray(sampled if temp > 0 else greedy)
-            cur = np.zeros((B,), np.int32)
-            for i in range(B):
-                if pos + 1 < plens[i]:
-                    cur[i] = toks[i, pos + 1]       # still prefilling
-                else:
-                    cur[i] = nxt[i]
-                    if i < len(requests) and \
-                            len(outs[i]) < requests[i].max_new_tokens:
-                        outs[i].append(int(nxt[i]))
-            last = jnp.asarray(cur)[:, None]
-        return [Result(tokens=outs[i]) for i in range(len(requests))]
+        """Deprecated compat wrapper over submit/step/drain (CHANGES.md
+        migration table).  Unlike the old static-batch implementation, each
+        request stops at ITS OWN ``max_new_tokens`` (no whole-batch
+        ``max(...)`` over-generation) and samples at ITS OWN temperature."""
+        if len(requests) > self.serve.batch:
+            # the session API queues instead; the one-shot wrapper keeps the
+            # old contract but fails cleanly rather than via assert
+            raise ValueError(f"{len(requests)} requests > "
+                             f"{self.serve.batch} lanes; use submit()/drain()")
+        self._key = jax.random.PRNGKey(seed)
+        handles = [self.submit(r) for r in requests]
+        self.drain()
+        return [h.result for h in handles]

@@ -1,0 +1,386 @@
+"""Serving stack tests: continuous batching vs the old static-batch path,
+slot reuse, per-request decode knobs, FD gradient monitor policy, runtime
+hyperparameter mutation (no retrace), and the end-to-end serve scenario
+(load generator -> traffic shift -> monitor trip -> S-AdaGrad adaptation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.serve import (ADAPT, PAUSE, STEADY, AdaptConfig, Engine,
+                         GradientMonitor, LoadGenerator, MonitorConfig,
+                         OnlineAdapter, Request, ServeConfig, TrafficConfig)
+
+KEY = jax.random.PRNGKey(0)
+MAX_SEQ = 24
+
+
+def _params(arch):
+    cfg = get_reduced(arch)
+    return cfg, model_lib.init_params(cfg, KEY)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(n,), dtype=np.int32)
+            for n in lens]
+
+
+def _static_generate(cfg, params, requests, max_seq):
+    """The pre-redesign static-batch loop (greedy): pads every request to a
+    common grid, runs ``max(max_new_tokens)`` steps for the whole batch,
+    truncates outputs per request.  Kept in-test as the parity reference."""
+    B = len(requests)
+    cache = cache_lib.init_cache(cfg, B, max_seq)
+    step = jax.jit(lambda p, c, b, pos: cache_lib.decode_step(cfg, p, c,
+                                                              b, pos))
+    prompts = [r.prompt for r in requests]
+    max_p = max(len(p) for p in prompts)
+    max_new = max(r.max_new_tokens for r in requests)
+    toks = np.zeros((B, max_p), np.int32)
+    plens = np.array([len(p) for p in prompts], np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    outs = [[] for _ in range(B)]
+    last = jnp.asarray(toks[:, :1])
+    for pos in range(max_p + max_new - 1):
+        logits, cache = step(params, cache, {"token": last},
+                             jnp.asarray(pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        cur = np.zeros((B,), np.int32)
+        for i in range(B):
+            if pos + 1 < plens[i]:
+                cur[i] = toks[i, pos + 1]
+            else:
+                cur[i] = nxt[i]
+                if len(outs[i]) < requests[i].max_new_tokens:
+                    outs[i].append(int(nxt[i]))
+        last = jnp.asarray(cur)[:, None]
+    return outs
+
+
+@pytest.mark.parametrize("arch", ["paper_lm_100m", "mamba2_370m",
+                                  "zamba2_7b"])
+def test_continuous_batching_matches_static_batch(arch):
+    """Greedy tokens from the session API == the old static-batch path, for
+    ragged prompt lengths and ragged max_new_tokens, across cache
+    families (attention / ssm / hybrid)."""
+    cfg, params = _params(arch)
+    reqs = [Request(p, max_new_tokens=n) for p, n in
+            zip(_prompts(cfg, [5, 3, 6]), [4, 6, 3])]
+    want = _static_generate(cfg, params, reqs, MAX_SEQ)
+
+    eng = Engine(cfg, params, ServeConfig(batch=3, max_seq=MAX_SEQ))
+    handles = [eng.submit(r) for r in reqs]
+    eng.drain()
+    for h, w in zip(handles, want):
+        assert h.tokens == w
+        assert h.done and len(h.tokens) == h.request.max_new_tokens
+
+
+def test_slot_reuse_parity():
+    """More requests than lanes: finished lanes are wiped and reused, and
+    every request still decodes exactly its solo-run tokens even though
+    its co-tenants (and the lane's previous occupant) differ."""
+    cfg, params = _params("paper_lm_100m")
+    reqs = [Request(p, max_new_tokens=n) for p, n in
+            zip(_prompts(cfg, [4, 6, 3, 5, 4]), [3, 6, 4, 2, 5])]
+
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_seq=MAX_SEQ))
+    handles = [eng.submit(r) for r in reqs]
+    assert eng.active == 2 and eng.pending == 3
+    eng.drain()
+
+    # solo reference: ONE single-lane engine serving sequentially — which
+    # itself exercises the lane wipe between occupants
+    solo = Engine(cfg, params, ServeConfig(batch=1, max_seq=MAX_SEQ))
+    for h in handles:
+        ref = solo.submit(Request(h.request.prompt,
+                                  h.request.max_new_tokens))
+        solo.drain()
+        assert h.tokens == ref.tokens, f"request {h.id}"
+
+
+def test_slot_reuse_wipes_ssm_state():
+    """Cumulative-state family: a reused lane must not leak the previous
+    occupant's SSM/conv state."""
+    cfg, params = _params("mamba2_370m")
+    (p0, p1) = _prompts(cfg, [6, 4], seed=3)
+
+    eng = Engine(cfg, params, ServeConfig(batch=1, max_seq=MAX_SEQ))
+    eng.submit(Request(p0, max_new_tokens=4))
+    eng.drain()
+    h1 = eng.submit(Request(p1, max_new_tokens=5))
+    eng.drain()
+
+    fresh = Engine(cfg, params, ServeConfig(batch=1, max_seq=MAX_SEQ))
+    ref = fresh.submit(Request(p1, max_new_tokens=5))
+    fresh.drain()
+    assert h1.tokens == ref.tokens
+
+
+def test_per_request_max_new_and_temperature():
+    """The old path generated max(...) tokens for everyone and sampled at a
+    batch-wide temperature; now both are per-lane: a greedy request is
+    bitwise-unaffected by a hot co-tenant and each stops at its own
+    budget."""
+    cfg, params = _params("paper_lm_100m")
+    (pg, ph) = _prompts(cfg, [5, 5], seed=1)
+
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_seq=MAX_SEQ, seed=7))
+    h_greedy = eng.submit(Request(pg, max_new_tokens=3, temperature=0.0))
+    h_hot = eng.submit(Request(ph, max_new_tokens=8, temperature=1.5))
+    eng.drain()
+    assert len(h_greedy.tokens) == 3
+    assert len(h_hot.tokens) == 8
+
+    solo = Engine(cfg, params, ServeConfig(batch=1, max_seq=MAX_SEQ))
+    ref = solo.submit(Request(pg, max_new_tokens=3, temperature=0.0))
+    solo.drain()
+    assert h_greedy.tokens == ref.tokens
+
+
+def test_engine_and_request_validation():
+    cfg, params = _params("paper_lm_100m")
+    bad = get_reduced("musicgen_large")
+    with pytest.raises(ValueError, match="token-input"):
+        Engine(bad, {}, ServeConfig())
+
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_seq=16))
+    (p,) = _prompts(cfg, [10])
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(p, max_new_tokens=12))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(p, max_new_tokens=0))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="lanes"):
+        eng.generate([Request(p, max_new_tokens=2)] * 3)
+
+
+def test_generate_compat_wrapper_no_overgeneration():
+    """Deprecated Engine.generate keeps the old signature but honors each
+    request's own max_new_tokens."""
+    cfg, params = _params("paper_lm_100m")
+    reqs = [Request(p, max_new_tokens=n) for p, n in
+            zip(_prompts(cfg, [4, 4]), [2, 6])]
+    eng = Engine(cfg, params, max_seq=MAX_SEQ, batch=2)   # legacy kwargs
+    results = eng.generate(reqs)
+    assert [len(r.tokens) for r in results] == [2, 6]
+    want = _static_generate(cfg, params, reqs, MAX_SEQ)
+    assert [r.tokens for r in results] == want
+
+
+# ---------------------------------------------------------------------------
+# monitor
+
+
+def _lowrank_grads(rng, basis, n, scale=1.0, noise=0.0):
+    d = basis.shape[0]
+    out = []
+    for _ in range(n):
+        g = basis @ rng.standard_normal(basis.shape[1])
+        if noise:
+            g = g + noise * rng.standard_normal(d)
+        out.append(scale * g.astype(np.float32))
+    return out
+
+
+def test_monitor_detects_distribution_shift():
+    """Steady low-rank traffic reads steady; an injected shift (subspace
+    rotation + rank blow-up) pushes BOTH the drift angle and the escaped-
+    mass pressure over threshold and triggers adaptation."""
+    d, ell, window = 64, 8, 16
+    rng = np.random.default_rng(0)
+    basis = np.linalg.qr(rng.standard_normal((d, 3)))[0]
+    mon = GradientMonitor(d, MonitorConfig(
+        ell=ell, window=window, top_k=3, drift_threshold=0.8,
+        pressure_threshold=0.2, warmup_windows=1))
+
+    readings = []
+    for g in _lowrank_grads(rng, basis, 3 * window):      # steady phase
+        r = mon.observe(g)
+        if r:
+            readings.append(r)
+    assert all(r.decision == STEADY for r in readings)
+    assert all(r.pressure < 0.05 for r in readings)
+
+    rot = np.linalg.qr(rng.standard_normal((d, d)))[0]    # full-rank shift
+    shifted = []
+    for g in _lowrank_grads(rng, rot, 2 * window):
+        r = mon.observe(g)
+        if r:
+            shifted.append(r)
+    assert any(r.decision == ADAPT for r in shifted)
+    trip = next(r for r in shifted if r.decision == ADAPT)
+    assert trip.drift_angle > 0.8          # subspace rotated
+    assert trip.pressure > 0.2             # rank-ell sketch overflows
+
+
+def test_monitor_pauses_on_magnitude_spike_then_recovers():
+    """A 100x gradient-energy burst reads as suspected bad traffic (pause,
+    not adapt), and is kept out of the EMA so the next honest window is
+    judged against pre-spike energy."""
+    d, window = 32, 8
+    rng = np.random.default_rng(1)
+    basis = np.linalg.qr(rng.standard_normal((d, 3)))[0]
+    mon = GradientMonitor(d, MonitorConfig(
+        ell=8, window=window, top_k=3, spike_factor=25.0,
+        drift_threshold=np.pi, pressure_threshold=1.1))   # isolate spike
+
+    for g in _lowrank_grads(rng, basis, 3 * window):
+        mon.observe(g)
+    ema_before = mon._eig_ema
+    for g in _lowrank_grads(rng, basis, window, scale=100.0):
+        r = mon.observe(g)
+    assert r.decision == PAUSE
+    assert mon._eig_ema == ema_before      # spike excluded from the EMA
+    for g in _lowrank_grads(rng, basis, window):
+        r = mon.observe(g)
+    assert r.decision != PAUSE             # honest traffic resumes
+
+
+def test_monitor_validation():
+    with pytest.raises(ValueError, match="top_k"):
+        MonitorConfig(ell=4, top_k=8)
+    mon = GradientMonitor(8)
+    with pytest.raises(ValueError, match="dim"):
+        mon.observe(np.zeros(9, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# online adaptation
+
+
+def _feedback(cfg, seed=1, seq=16, batch=4):
+    return SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+
+
+def test_adapter_reduces_feedback_loss():
+    cfg, params = _params("paper_lm_100m")
+    batch = _feedback(cfg).batch(0)
+    ad = OnlineAdapter(cfg, params, AdaptConfig(lr=0.1, beta2=0.95, ell=8))
+    loss0, g = ad.grad(params, batch)
+    assert g.shape == (ad.d,) and np.isfinite(float(loss0))
+    p = params
+    for _ in range(5):
+        p, loss = ad.step(p, batch)
+    assert float(loss) < float(loss0)
+    # only the head leaf moved
+    assert not np.array_equal(np.asarray(p["lm_head"]),
+                              np.asarray(params["lm_head"]))
+    np.testing.assert_array_equal(np.asarray(p["embed"]),
+                                  np.asarray(params["embed"]))
+
+
+def test_set_hyperparams_mid_serve_no_retrace():
+    """api.set_hyperparams mutates lr/beta2 in optimizer state: takes
+    effect on the next step with no retrace of the jitted update."""
+    cfg, params = _params("paper_lm_100m")
+    batch = _feedback(cfg).batch(0)
+    ad = OnlineAdapter(cfg, params, AdaptConfig(lr=0.1, beta2=0.95))
+    p, _ = ad.step(params, batch)
+    assert ad.trace_count == 1
+
+    ad.set_hyperparams(learning_rate=0.0)
+    p2, _ = ad.step(p, batch)
+    assert ad.trace_count == 1             # no retrace
+    np.testing.assert_array_equal(np.asarray(p2["lm_head"]),
+                                  np.asarray(p["lm_head"]))   # lr=0 freezes
+
+    ad.set_hyperparams(learning_rate=0.2, beta2=0.5)
+    p3, _ = ad.step(p2, batch)
+    assert ad.trace_count == 1
+    assert not np.array_equal(np.asarray(p3["lm_head"]),
+                              np.asarray(p2["lm_head"]))
+    assert ad.hyperparams["learning_rate"] == pytest.approx(0.2)
+    with pytest.raises(KeyError, match="unknown"):
+        ad.set_hyperparams(nope=1.0)
+
+
+# ---------------------------------------------------------------------------
+# end to end
+
+
+def test_loadgen_deterministic_shapes():
+    cfg = get_reduced("paper_lm_100m")
+    gen = LoadGenerator(TrafficConfig(shape="step", rate=1.0, ticks=12,
+                                      step_at=6, step_mult=3.0,
+                                      prompt_len=4, new_tokens=3),
+                        cfg.vocab_size)
+    counts = [len(gen.arrivals(t)) for t in range(12)]
+    assert counts == [len(gen.arrivals(t)) for t in range(12)]   # replayable
+    assert gen.rate_at(0) == 1.0 and gen.rate_at(6) == 3.0
+    assert sum(counts[6:]) > sum(counts[:6])
+    req = gen.arrivals(1)[0] if counts[1] else gen.arrivals(4)[0]
+    assert req.prompt.shape == (4,) and req.max_new_tokens == 3
+    with pytest.raises(ValueError, match="shape"):
+        TrafficConfig(shape="sawtooth")
+
+
+def test_e2e_shift_trips_monitor_and_adaptation_recovers():
+    """The acceptance scenario: a load generator drives the engine while
+    feedback batches stream through the monitor.  Steady traffic (a fixed
+    query mix) keeps the monitor quiet; an injected label shift rotates
+    the feedback-gradient subspace, the drift signal trips, and the
+    S-AdaGrad adaptation steps measurably reduce loss on the shifted
+    distribution."""
+    cfg, params = _params("paper_lm_100m")
+    gen = LoadGenerator(TrafficConfig(rate=1.0, ticks=12, prompt_len=4,
+                                      new_tokens=3, seed=2), cfg.vocab_size)
+    eng = Engine(cfg, params, ServeConfig(batch=2, max_seq=MAX_SEQ))
+    ad = OnlineAdapter(cfg, params, AdaptConfig(lr=0.3, beta2=0.9, ell=8))
+    mon = GradientMonitor(ad.d, MonitorConfig(
+        ell=8, window=3, top_k=3, drift_threshold=0.9,
+        pressure_threshold=1.1, spike_factor=1e9, warmup_windows=1))
+
+    # steady phase: recurring query mix — a small pool of feedback batches
+    pool = [_feedback(cfg, seed=5).batch(i) for i in range(3)]
+
+    def shifted(batch, shift=17):
+        out = dict(batch)
+        out["labels"] = (batch["labels"] + shift) % cfg.vocab_size
+        return out
+
+    served = []
+    for tick in range(6):                          # steady traffic
+        for r in gen.arrivals(tick):
+            served.append(eng.submit(r))
+        eng.step()
+        _, g = ad.grad(params, pool[tick % 3])
+        mon.observe(g)
+    steady = list(mon.readings)
+    assert steady and all(r.decision == STEADY for r in steady)
+
+    shifted_batches = [shifted(b) for b in pool]
+    loss_before = float(ad.grad(params, shifted_batches[0])[0])
+    adapted = params
+    tripped = False
+    for tick in range(6, 12):                      # shifted traffic
+        for r in gen.arrivals(tick):
+            served.append(eng.submit(r))
+        eng.step()
+        batch = shifted_batches[tick % 3]
+        _, g = ad.grad(adapted, batch)
+        reading = mon.observe(g)
+        if reading is not None and reading.decision == ADAPT:
+            tripped = True
+        if tripped:
+            adapted, _ = ad.step(adapted, batch)
+            eng.params = adapted               # serve the adapted weights
+    eng.drain()
+
+    assert tripped, [str(r) for r in mon.readings]
+    trip = next(r for r in mon.readings if r.decision == ADAPT)
+    assert trip.window >= len(steady)          # tripped only after shift
+    loss_after = float(ad.grad(adapted, shifted_batches[0])[0])
+    assert loss_after < loss_before - 0.05, (loss_before, loss_after)
+
+    assert all(h.done for h in served)         # traffic fully served
+    assert all(len(h.tokens) == h.request.max_new_tokens for h in served)
